@@ -1,0 +1,72 @@
+"""Paper Fig. 9 analogue: KV-store op latency — full Bertha stack vs
+no-chunnel (inlined) vs no-chunnel-no-mux baselines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, pct
+from repro.core import Fabric, FnChunnel, LinkModel, LockedConn, make_stack
+from repro.core.capability import CapabilitySet
+from repro.serving.router import AddressedTransport, ClientShardChunnel, KVBackend, KVClient
+
+
+def run(config: str, n_req: int = 200) -> list:
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0005))
+    backends = [KVBackend(fabric, f"kv{i}") for i in range(4)]
+    ep = fabric.register("cli")
+    if config == "full":
+        # serialization + sharding + reliability-tag chunnels (3 functional)
+        ser = FnChunnel(fn_name="Serialize", on_send=lambda m: m,
+                        caps=CapabilitySet.exact("ser:dict"))
+        rel = FnChunnel(fn_name="Reliability",
+                        on_send=lambda m: {**m, "_seq": m["rid"]})
+        stack = make_stack(ser, rel,
+                           ClientShardChunnel(backends=tuple(b.addr for b in backends)),
+                           AddressedTransport(ep))
+    elif config == "no_chunnel":
+        stack = make_stack(ClientShardChunnel(backends=tuple(b.addr for b in backends)),
+                           AddressedTransport(ep))
+    else:  # no_chunnel_no_mux: direct to a single fixed backend
+        class Direct(FnChunnel):
+            def connect_wrap(self, inner):
+                dp = inner
+
+                class DP:
+                    def send(self, msgs):
+                        for m in msgs:
+                            m = dict(m)
+                            m["_route_to"] = backends[0].addr
+                            dp.send([m])
+
+                    def recv(self, buf, timeout=None):
+                        return dp.recv(buf, timeout)
+
+                return DP()
+
+        stack = make_stack(Direct(fn_name="Direct"), AddressedTransport(ep))
+
+    client = KVClient(fabric, ep, LockedConn(stack.preferred()))
+    lats = []
+    for i in range(n_req):
+        _, lat = client.request("get", f"k{i % 11}", timeout=3.0)
+        lats.append(lat)
+    for b in backends:
+        b.close()
+    return lats
+
+
+def main() -> None:
+    base = None
+    for config in ("no_chunnel_no_mux", "no_chunnel", "full"):
+        lats = run(config)
+        p50 = pct(lats, 50)
+        if base is None:
+            base = p50
+        emit(f"kvlat_{config}_p50", p50 * 1e6,
+             f"p95={pct(lats,95)*1e6:.0f}us;vs_base={p50/base - 1:+.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 10 analogue: lock vs lock-free (barrier) reconfiguration.
+
+Measures (a) steady-state per-op latency of each mechanism under multi-thread
+load (the lock's fast-path tax) and (b) the reconfiguration blip (switch
+duration) for each, swapping between two datapath implementations mid-run.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, pct
+from repro.core import BarrierConn, Fabric, FabricTransport, FnChunnel, LockedConn, make_stack
+
+
+def _stack(fabric, tag):
+    ep = fabric.register(f"bench-{tag}-{time.monotonic_ns()}")
+    return make_stack(FnChunnel(fn_name=f"Impl{tag}", on_send=lambda m: m),
+                      FabricTransport(ep, "sink"))
+
+
+def run_mechanism(mechanism: str, n_threads: int = 3, duration_s: float = 1.2,
+                  reconfigure_at: float = 0.5):
+    fabric = Fabric()
+    st_a, st_b = _stack(fabric, "A"), _stack(fabric, "B")
+    handle = (LockedConn(st_a.preferred()) if mechanism == "lock"
+              else BarrierConn(st_a.preferred(), n_threads=n_threads))
+    lat: list = []
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            handle.send([b"x"])
+            lat.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=pump) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    time.sleep(reconfigure_at)
+    t0 = time.perf_counter()
+    ok = handle.reconfigure(st_b.preferred())
+    switch_s = time.perf_counter() - t0
+    time.sleep(duration_s - reconfigure_at)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert ok and handle.stats.switches == 1
+    return lat, switch_s
+
+
+def main() -> None:
+    for mech in ("lock", "barrier"):
+        lat, switch_s = run_mechanism(mech)
+        emit(f"reconfig_{mech}_fastpath_p50", pct(lat, 50) * 1e6,
+             f"p95={pct(lat, 95)*1e6:.2f}us;n={len(lat)}")
+        emit(f"reconfig_{mech}_switch", switch_s * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

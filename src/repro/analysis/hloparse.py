@@ -1,0 +1,179 @@
+"""Parse collective ops (+ bytes) out of compiled HLO text, with while-loop
+trip-count correction.
+
+cost_analysis() does not report collective bytes, so we sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in ``compiled.as_text()``. Ops inside while bodies (lax.scan over layers /
+attention chunks) appear once; we recover trip counts from each while op's
+``backend_config={"known_trip_count":{"n":...}}`` and multiply, following the
+call graph (body= / condition= / to_apply= / calls=) so nested scans compose.
+
+HLO shapes in the SPMD-partitioned module are PER-DEVICE, so returned bytes are
+per-device per-step.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8, "s32": 4,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_CALL_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{\s*"n"\s*:\s*"?(\d+)')
+
+
+def shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[128,256]{1,0}' or a tuple '(f32[2], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    """computation name -> op lines; also returns the ENTRY computation name."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if cur is None:
+            if stripped.endswith("{") and ("->" in stripped or stripped.startswith(("ENTRY", "%"))):
+                m = _HEADER_RE.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if stripped.lstrip().startswith("ENTRY"):
+                        entry = cur
+            continue
+        if stripped == "}" or stripped.endswith("} // " + cur) or stripped == "} ":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps, entry
+
+
+def _while_multipliers(comps: Dict[str, List[str]], entry: Optional[str]) -> Dict[str, float]:
+    """computation -> product of enclosing while trip counts."""
+    # edges: computation -> [(callee, multiplier)]
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            trip = 1.0
+            if "while(" in ln:
+                tm = _TRIP_RE.search(ln)
+                if tm:
+                    trip = float(tm.group(1))
+            for cm in _CALL_RE.finditer(ln):
+                callee = cm.group(1)
+                edges[name].append((callee, trip if "while(" in ln else 1.0))
+
+    mults: Dict[str, float] = {}
+
+    def visit(name: str, acc: float, depth: int = 0):
+        if depth > 64 or name not in comps:
+            return
+        if mults.get(name, 0.0) >= acc:
+            return
+        mults[name] = acc
+        for callee, m in edges.get(name, ()):
+            visit(callee, acc * m, depth + 1)
+
+    roots = [entry] if entry else []
+    if not roots:
+        roots = [n for n in comps if "main" in n]
+    for r in roots:
+        if r:
+            visit(r, 1.0)
+    for n in comps:
+        mults.setdefault(n, 1.0)
+    return mults
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: float
+    mult: float
+    line: str
+
+
+@dataclass
+class CollectiveStats:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    def add(self, kind: str, nbytes: float, mult: float, line: str):
+        self.ops.append(CollectiveOp(kind, nbytes, mult, line))
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(o.bytes * o.mult for o in self.ops)
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for o in self.ops:
+            out[o.kind] += o.bytes * o.mult
+        return dict(out)
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for o in self.ops:
+            out[o.kind] += max(1, int(o.mult))
+        return dict(out)
+
+    def to_dict(self) -> dict:
+        return {"counts": self.counts(), "bytes": self.by_kind(),
+                "total_bytes": float(self.total_bytes)}
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^=]*\)\s*)?[\w\[\],\{\} ]*?\b(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+
+
+def iter_collectives(hlo: str):
+    """Yield (kind, bytes, multiplier, line) for every collective op."""
+    comps, entry = split_computations(hlo)
+    mults = _while_multipliers(comps, entry)
+    for name, lines in comps.items():
+        mult = mults.get(name, 1.0)
+        for ln in lines:
+            if "-done" in ln:
+                continue
+            found = None
+            for kind in COLLECTIVES:
+                if f" {kind}(" in ln or f" {kind}-start(" in ln:
+                    found = kind
+                    break
+            if found is None:
+                continue
+            # result shape sits between '=' and the op name:
+            #   %all-reduce.1 = f32[256,512]{1,0} all-reduce(...)
+            rhs = ln.split("=", 1)[1] if "=" in ln else ln
+            idx = rhs.find(f" {found}")
+            shape_str = rhs[:idx] if idx > 0 else rhs
+            yield found, float(shape_bytes(shape_str)), mult, ln
+
+
+def collective_stats(hlo: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for kind, nbytes, mult, ln in iter_collectives(hlo):
+        stats.add(kind, nbytes, mult, ln)
+    return stats

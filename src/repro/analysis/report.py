@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from results/dryrun JSON."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for f in sorted(Path(out_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    return f"{x:.2e}"
+
+
+def roofline_table(recs, multi_pod=False) -> str:
+    rows = [
+        "| arch | shape | dom | compute s | memory s | collective s | DCN GB | "
+        "MODEL_TF | useful | MFU-bound | mem GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if r.get("skipped"):
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | — | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['dominant']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dcn_bytes_per_dev']/1e9:.2f} | {rf['model_flops']/1e12:.0f} | "
+            f"{rf['hlo_useful_ratio']:.2f} | {rf['mfu']:.2f} | "
+            f"{m['per_device_total']/1e9:.1f} | {'Y' if m['fits_16GB'] else 'N'} |")
+    return "\n".join(rows)
+
+
+def dryrun_summary(recs) -> str:
+    ok = sum(1 for r in recs if not r.get("skipped") and "error" not in r)
+    skip = sum(1 for r in recs if r.get("skipped"))
+    err = sum(1 for r in recs if "error" in r)
+    lines = [f"compiled OK: {ok}, skipped (recorded): {skip}, failed: {err}", ""]
+    lines.append("| arch | shape | mesh | lower s | compile s | HLO flops/dev | "
+                 "HLO bytes/dev | coll ops |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("skipped") or "error" in r:
+            continue
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        ca = r.get("cost_analysis", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['lower_s']} | {r['compile_s']} | "
+            f"{ca.get('flops', 0):.2e} | {ca.get('bytes accessed', 0):.2e} | "
+            f"{r['roofline']['coll_bytes_per_dev']/1e9:.2f} GB |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## Single-pod (16x16)\n")
+    print(roofline_table(recs, multi_pod=False))
+    print("\n## Multi-pod (2x16x16)\n")
+    print(roofline_table(recs, multi_pod=True))

@@ -1,0 +1,23 @@
+from repro.comm.chunnels import (
+    GradCompressed,
+    GradHierCompressed,
+    GradHierarchical,
+    GradLocalSGD,
+    GradPsum,
+    GradRing,
+    GradXla,
+    StepChunnel,
+    apply_grad_stack,
+    init_grad_states,
+    make_transport,
+    stack_manual_axes,
+)
+from repro.comm.kvshard import KVHeadSharded, KVSeqSharded, make_seq_sharded_decode, pick_kv_chunnel
+from repro.comm.moe_dispatch import MoEDispatch
+
+__all__ = [
+    "GradCompressed", "GradHierCompressed", "GradHierarchical", "GradLocalSGD",
+    "GradPsum", "GradRing", "GradXla", "KVHeadSharded", "KVSeqSharded",
+    "MoEDispatch", "StepChunnel", "apply_grad_stack", "init_grad_states",
+    "make_seq_sharded_decode", "make_transport", "pick_kv_chunnel", "stack_manual_axes",
+]

@@ -1,0 +1,305 @@
+"""Step chunnels: Bertha chunnels whose datapath is the jitted step dataflow.
+
+On a TPU cluster EVERY collective chunnel is multilateral: hosts must compile
+the identical SPMD program or the job deadlocks at the first mismatched
+collective — which is exactly the incompatibility Bertha's negotiation exists
+to prevent (DESIGN.md §2). The exact-match capability labels below are what
+the host agents negotiate before compiling.
+
+The gradient-transport Select (paper Fig. 1's Kernel-vs-DPDK analogue):
+
+    Select(GradXla(), GradHierarchical(), GradRing(), GradCompressed())
+
+GradXla delegates the whole schedule to the XLA partitioner (paper-faithful
+default); the others take manual control of the pod/DCN tier via shard_map.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import collectives, compress
+from repro.core.capability import CapabilitySet
+from repro.core.chunnel import Chunnel, Datapath, WireType
+
+GRADS_F32 = WireType.of("grads", dtype="f32")
+UNIT = WireType.of("unit")
+
+
+class StepChunnel(Chunnel):
+    """A chunnel applied to pytrees inside the jitted step function.
+
+    connect_wrap composes at *trace time* — the compiled program carries no
+    dispatch overhead (the Rust-monomorphization property, verified in
+    benchmarks/bench_overhead.py by HLO comparison).
+    """
+
+    multilateral = True  # SPMD: all hosts must agree
+    upper_type = GRADS_F32
+    lower_type = UNIT
+
+    #: mesh axes this chunnel needs manual (shard_map) control over
+    manual_axes: tuple = ()
+
+    def init_state(self, grads_shape):
+        return ()
+
+    def apply(self, tree, state, ctx: dict):
+        raise NotImplementedError
+
+    def connect_wrap(self, inner: Optional[Datapath]) -> Datapath:
+        return _StepDatapath(self, inner)
+
+
+class _StepDatapath(Datapath):
+    def __init__(self, ch: StepChunnel, inner: Optional[Datapath]):
+        self.ch = ch
+        self.inner = inner
+
+    def send(self, msgs):
+        raise RuntimeError("step chunnels run inside jit via apply(), not send()")
+
+    recv = send
+
+
+def apply_grad_stack(chunnels, tree, states, ctx):
+    """Fold grads through the stack top-down; returns (tree, new_states)."""
+    new_states = []
+    for ch, st in zip(chunnels, states):
+        tree, st = ch.apply(tree, st, ctx)
+        new_states.append(st)
+    return tree, tuple(new_states)
+
+
+def stack_manual_axes(chunnels) -> set:
+    out = set()
+    for ch in chunnels:
+        out |= set(getattr(ch, "manual_axes", ()))
+    return out
+
+
+def init_grad_states(chunnels, grads_shape):
+    return tuple(ch.init_state(grads_shape) for ch in chunnels)
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GradXla(StepChunnel):
+    """Delegate gradient sync to the XLA partitioner (the 'kernel stack')."""
+
+    axis: str = "pod"
+    manual_axes = ()
+
+    @property
+    def name(self):
+        return "GradXla"
+
+    def capabilities(self):
+        return CapabilitySet.exact("wire:f32").union_(
+            CapabilitySet.compose("transport:xla"))
+
+    def apply(self, tree, state, ctx):
+        return tree, state  # XLA inserts the collectives itself
+
+
+@dataclass
+class GradPsum(StepChunnel):
+    """Explicit psum over the slow axis (XLA-native AR, manual placement)."""
+
+    axis: str = "pod"
+
+    def __post_init__(self):
+        self.manual_axes = (self.axis,)
+
+    @property
+    def name(self):
+        return "GradPsum"
+
+    def capabilities(self):
+        return CapabilitySet.exact("wire:f32", f"transport:psum@{self.axis}")
+
+    def apply(self, tree, state, ctx):
+        return collectives.pmean_tree(tree, self.axis), state
+
+
+@dataclass
+class GradRing(StepChunnel):
+    """Bidirectional-ring RS+AG via collective-permutes (explicit schedule)."""
+
+    axis: str = "pod"
+
+    def __post_init__(self):
+        self.manual_axes = (self.axis,)
+
+    @property
+    def name(self):
+        return "GradRing"
+
+    def capabilities(self):
+        return CapabilitySet.exact("wire:f32", f"transport:ring@{self.axis}")
+
+    def apply(self, tree, state, ctx):
+        n = ctx["mesh"].shape[self.axis]
+        out = collectives.ring_tree(tree, self.axis)
+        return jax.tree.map(lambda g: g / n, out), state
+
+
+@dataclass
+class GradHierarchical(StepChunnel):
+    """RS(fast/ICI) -> AR(slow/DCN) -> AG(fast): per-chip DCN bytes / |fast|.
+
+    INCOMPATIBLE with FSDP over the fast axis: taking 'data' manual replicates
+    the FSDP-sharded params inside the region (measured: 2TB/device on the
+    235B cell — EXPERIMENTS.md §Perf refuted-hypothesis log). With FSDP the
+    XLA/psum pod transport already sends only each chip's 1/|data| gradient
+    shard over DCN, i.e. FSDP+psum IS the hierarchical schedule. Negotiation
+    enforces this via the layout:fsdp exact capability below.
+    """
+
+    fast_axis: str = "data"
+    slow_axis: str = "pod"
+
+    def __post_init__(self):
+        self.manual_axes = (self.fast_axis, self.slow_axis)
+
+    @property
+    def name(self):
+        return "GradHierarchical"
+
+    def capabilities(self):
+        # exact 'layout:noshard@fast' conflicts with FSDP stacks (which carry
+        # 'layout:fsdp@data'): Bertha's negotiation rejects the combination.
+        return CapabilitySet.exact(
+            "wire:f32", f"transport:hier@{self.fast_axis}+{self.slow_axis}",
+            f"layout:noshard@{self.fast_axis}")
+
+    def apply(self, tree, state, ctx):
+        n = ctx["mesh"].shape[self.slow_axis] * ctx["mesh"].shape[self.fast_axis]
+        out = collectives.hierarchical_tree(tree, self.fast_axis, self.slow_axis)
+        return jax.tree.map(lambda g: g / n, out), state
+
+
+@dataclass
+class GradCompressed(StepChunnel):
+    """int8 block-quantized DCN wire format + error feedback (multilateral:
+    both ends must speak wire:int8-blockq — the serialization-chunnel analogue)."""
+
+    axis: str = "pod"
+    block: int = 256
+    error_feedback: bool = True
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self.manual_axes = (self.axis,)
+
+    @property
+    def name(self):
+        return "GradCompressed"
+
+    def capabilities(self):
+        return CapabilitySet.exact(f"wire:int8-blockq{self.block}",
+                                   f"transport:cag@{self.axis}")
+
+    def init_state(self, grads_shape):
+        if not self.error_feedback:
+            return ()
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), grads_shape)
+
+    def apply(self, tree, state, ctx):
+        n = ctx["mesh"].shape[self.axis]
+        if self.error_feedback and state != ():
+            tree = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, tree, state)
+        out = collectives.compressed_tree(tree, self.axis, block=self.block,
+                                          use_kernel=self.use_kernel)
+        new_state = state
+        if self.error_feedback and state != ():
+            # residual of OUR contribution (what we failed to transmit)
+            new_state = jax.tree.map(
+                lambda g: compress.quantize_error(g, block=self.block), tree)
+        return jax.tree.map(lambda g: g / n, out), new_state
+
+
+@dataclass
+class GradHierCompressed(StepChunnel):
+    """Beyond-paper: hierarchical + compressed DCN tier combined."""
+
+    fast_axis: str = "data"
+    slow_axis: str = "pod"
+    block: int = 256
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self.manual_axes = (self.fast_axis, self.slow_axis)
+
+    @property
+    def name(self):
+        return "GradHierCompressed"
+
+    def capabilities(self):
+        return CapabilitySet.exact(
+            f"wire:int8-blockq{self.block}",
+            f"transport:hiercag@{self.fast_axis}+{self.slow_axis}",
+            f"layout:noshard@{self.fast_axis}",
+        )
+
+    def apply(self, tree, state, ctx):
+        n = ctx["mesh"].shape[self.slow_axis] * ctx["mesh"].shape[self.fast_axis]
+        out = collectives.hierarchical_compressed_tree(
+            tree, self.fast_axis, self.slow_axis, block=self.block,
+            use_kernel=self.use_kernel)
+        return jax.tree.map(lambda g: g / n, out), state
+
+
+@dataclass
+class GradLocalSGD(StepChunnel):
+    """Straggler/elasticity mitigation: sync every H steps, accumulate locally
+    otherwise (async-ish DCN relief; a reconfiguration target when the runtime
+    detects slow pods)."""
+
+    axis: str = "pod"
+    sync_every: int = 4
+
+    def __post_init__(self):
+        self.manual_axes = (self.axis,)
+
+    @property
+    def name(self):
+        return "GradLocalSGD"
+
+    def capabilities(self):
+        return CapabilitySet.exact("wire:f32", f"transport:localsgd{self.sync_every}@{self.axis}")
+
+    def init_state(self, grads_shape):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def apply(self, tree, state, ctx):
+        step = state["step"]
+        do_sync = (step % self.sync_every) == self.sync_every - 1
+
+        def sync(t):
+            return collectives.pmean_tree(t, self.axis)
+
+        out = jax.lax.cond(do_sync, sync, lambda t: t, tree)
+        return out, {"step": step + 1}
+
+
+TRANSPORTS = {
+    "xla": GradXla,
+    "psum": GradPsum,
+    "ring": GradRing,
+    "hierarchical": GradHierarchical,
+    "compressed_int8": GradCompressed,
+    "hier_compressed": GradHierCompressed,
+    "localsgd": GradLocalSGD,
+}
+
+
+def make_transport(name: str, **kw) -> StepChunnel:
+    return TRANSPORTS[name](**kw)

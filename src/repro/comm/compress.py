@@ -1,0 +1,52 @@
+"""Gradient wire formats: int8 block quantization (+ error feedback).
+
+This is the 'serialization chunnel' analogue (exact-match capability — every
+peer must speak the same wire format). The jnp implementation here is the
+oracle; the Pallas TPU kernel lives in kernels/quantize and is selected with
+``use_kernel=True`` on real hardware (validated in interpret mode in tests).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to_block(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    return jnp.pad(flat, (0, pad))
+
+
+def quantize_int8(x: jnp.ndarray, *, block: int = 256,
+                  use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any shape) -> (q int8 (nblocks, block), scales fp32 (nblocks,))."""
+    if use_kernel:
+        from repro.kernels.quantize import ops as qops
+
+        return qops.quantize_int8(x, block=block)
+    flat = _pad_to_block(x, block).reshape(-1, block)
+    amax = jnp.max(jnp.abs(flat), axis=1)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(flat / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, shape, *, block: int = 256,
+                    use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        from repro.kernels.quantize import ops as qops
+
+        return qops.dequantize_int8(q, scales, shape, block=block)
+    n = 1
+    for s in shape:
+        n *= s
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def quantize_error(x: jnp.ndarray, *, block: int = 256) -> jnp.ndarray:
+    """Residual x - dq(q(x)) for error feedback."""
+    q, s = quantize_int8(x, block=block)
+    return x - dequantize_int8(q, s, x.shape, block=block)

@@ -1,0 +1,130 @@
+"""KV-cache partitioning chunnels for decode (a Bertha routing Select).
+
+  heads     — KV heads sharded over 'model' (only when kv_heads % |model| == 0:
+              phi-3 (32), seamless (16)); plain local attention per shard.
+  sequence  — cache SEQUENCE sharded over 'model' (granite kv=1, hymba kv=5,
+              qwen/mistral/dbrx kv∤16): flash-decoding — each rank computes
+              partial (m, l, o) over its sequence shard, combined with a
+              logsumexp-weighted psum across 'model'.
+
+Decode is memory-bound; sequence sharding spreads the dominant HBM stream
+(the cache read) across all chips regardless of kv-head count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.capability import CapabilitySet
+from repro.comm.chunnels import StepChunnel
+
+NEG_INF = -1e30
+
+
+def _expand_kv(x, group):
+    return x if group == 1 else jnp.repeat(x, group, axis=2)
+
+
+def flash_decode_local(q, k_loc, v_loc, start, kv_len, window=None):
+    """Partial attention over a local cache shard.
+
+    q: (B,1,H,hd); k_loc/v_loc: (B,S_loc,KH,hd); start: global pos of shard[0].
+    Returns (o (B,H,hd) fp32, l (B,H) fp32, m (B,H) fp32).
+    """
+    B, _, H, hd = q.shape
+    KH = k_loc.shape[2]
+    k = _expand_kv(k_loc, H // KH)
+    v = _expand_kv(v_loc, H // KH)
+    scale = hd**-0.5
+    s = jnp.einsum("bqhd,bkhd->bhk", q.astype(jnp.bfloat16),
+                   k.astype(jnp.bfloat16)).astype(jnp.float32) * scale
+    kpos = start + jnp.arange(k.shape[1])
+    valid = kpos[None, :] < jnp.asarray(kv_len).reshape(-1, 1)
+    if window is not None:
+        valid &= kpos[None, :] >= jnp.asarray(kv_len).reshape(-1, 1) - window
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)  # kill exp(NEG_INF - NEG_INF)=1 rows
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p.astype(jnp.bfloat16),
+                   v.astype(jnp.bfloat16)).astype(jnp.float32)
+    return o, l, m
+
+
+def make_seq_sharded_decode(mesh, axis: str = "model"):
+    """Returns attn_fn(q, k_cache, v_cache, kv_len, window) with the cache
+    sequence dim manual over ``axis`` and flash-decode combine."""
+
+    def attn_fn(q, k_cache, v_cache, kv_len, window=None):
+        def inner(q_, kc, vc, n_):
+            rank = jax.lax.axis_index(axis)
+            S_loc = kc.shape[1]
+            o, l, m = flash_decode_local(q_, kc, vc, rank * S_loc, n_, window)
+            m_g = jax.lax.pmax(m, axis)
+            corr = jnp.exp(m - m_g)
+            l_g = jax.lax.psum(l * corr, axis)
+            o_g = jax.lax.psum(o * corr[..., None], axis)
+            out = o_g / jnp.maximum(l_g, 1e-20)[..., None]
+            return out[:, None].astype(q_.dtype)  # (B,1,H,hd)
+
+        f = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P()),
+            out_specs=P(),
+            check_vma=False,
+            axis_names={axis},
+        )
+        return f(q, k_cache, v_cache, jnp.asarray(kv_len))
+
+    return attn_fn
+
+
+# ---------------------------------------------------------------------------
+# Chunnel wrappers (negotiated; compositional capability — routing-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KVHeadSharded(StepChunnel):
+    axis: str = "model"
+
+    @property
+    def name(self):
+        return "KVHeadSharded"
+
+    def capabilities(self):
+        return CapabilitySet.compose(f"kvshard:heads@{self.axis}")
+
+    def apply(self, tree, state, ctx):
+        return tree, state  # layout-only: sharding specs select head partitioning
+
+
+@dataclass
+class KVSeqSharded(StepChunnel):
+    axis: str = "model"
+
+    @property
+    def name(self):
+        return "KVSeqSharded"
+
+    def capabilities(self):
+        return CapabilitySet.compose(f"kvshard:sequence@{self.axis}")
+
+    def attn_fn(self, mesh):
+        return make_seq_sharded_decode(mesh, self.axis)
+
+    def apply(self, tree, state, ctx):
+        return tree, state
+
+
+def pick_kv_chunnel(cfg, mesh, sharding_cfg) -> StepChunnel:
+    from repro.models.sharding import kv_partition_mode
+
+    mode = kv_partition_mode(cfg, mesh, sharding_cfg)
+    return KVHeadSharded() if mode == "heads" else KVSeqSharded()

@@ -1,0 +1,41 @@
+"""MoE dispatch chunnels: the negotiation-facing wrappers for the expert
+dispatch Select implemented in repro/models/moe.py.
+
+  grouped    capacity gather/scatter, schedule left to XLA (paper-faithful)
+  alltoall   explicit EP all-to-all over 'model' (2 a2a + AG per MoE layer)
+  allgather  local-experts-for-all-tokens + psum combine (1 AR per MoE layer)
+
+All are multilateral (SPMD) with exact capability labels; dense is the oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.capability import CapabilitySet
+from repro.comm.chunnels import StepChunnel
+
+
+@dataclass
+class MoEDispatch(StepChunnel):
+    impl: str = "grouped"  # dense | grouped | alltoall | allgather
+    axis: str = "model"
+
+    def __post_init__(self):
+        self.manual_axes = (self.axis,) if self.impl in ("alltoall", "allgather") else ()
+
+    @property
+    def name(self):
+        return f"MoEDispatch[{self.impl}]"
+
+    def capabilities(self):
+        return CapabilitySet.exact(f"moe:{self.impl}@{self.axis}")
+
+    def apply(self, tree, state, ctx):
+        return tree, state  # resolved via ModelConfig.moe.dispatch at trace time
+
+
+def configure(cfg, impl: str):
+    """Return a config with the negotiated dispatch impl."""
+    import dataclasses
+
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch=impl))

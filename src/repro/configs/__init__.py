@@ -1,0 +1,60 @@
+"""Architecture config registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    ShardingConfig,
+    TrainConfig,
+    shape_applicable,
+)
+
+_ARCH_MODULES = {
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "granite-34b": "repro.configs.granite_34b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision_4b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    cfg = importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    cfg = importlib.import_module(_ARCH_MODULES[arch]).smoke_config()
+    cfg.validate()
+    return cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "ShardingConfig",
+    "TrainConfig",
+    "get_config",
+    "get_smoke_config",
+    "get_shape",
+    "shape_applicable",
+]

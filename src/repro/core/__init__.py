@@ -1,0 +1,31 @@
+"""Bertha core: reconfigurable, extensible communication stacks.
+
+Glossary (paper Table 1):
+  Chunnel          a specific piece of network functionality
+  Chunnel stack    an application's specification of the chunnels it wants
+  Reconfiguration  picking/changing chunnel implementations at runtime
+  Negotiation      ensuring implementations are compatible across endpoints
+"""
+from repro.core.capability import Capability, CapabilitySet
+from repro.core.chunnel import ANY, Chunnel, Datapath, FnChunnel, WireType
+from repro.core.fabric import Fabric, LinkModel, ReliableChannel
+from repro.core.negotiate import (
+    NegotiatedConn,
+    NegotiationError,
+    ServerNegotiator,
+    ZeroRttCache,
+    client_negotiate,
+    pick_compatible,
+)
+from repro.core.reconfigure import BarrierConn, ConnHandle, LockedConn
+from repro.core.rendezvous import KVStore
+from repro.core.runtime import FabricTransport, HostAgent
+from repro.core.stack import ConcreteStack, Select, Stack, StackTypeError, make_stack
+
+__all__ = [
+    "ANY", "Capability", "CapabilitySet", "Chunnel", "ConcreteStack", "ConnHandle",
+    "Datapath", "Fabric", "FabricTransport", "FnChunnel", "HostAgent", "KVStore",
+    "LinkModel", "LockedConn", "BarrierConn", "NegotiatedConn", "NegotiationError",
+    "ReliableChannel", "Select", "ServerNegotiator", "Stack", "StackTypeError",
+    "WireType", "ZeroRttCache", "client_negotiate", "make_stack", "pick_compatible",
+]

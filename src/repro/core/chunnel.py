@@ -1,0 +1,147 @@
+"""The Chunnel abstraction (Bertha §3).
+
+A Chunnel is a single unit of communication functionality that can
+  (a) transform data (serialize / compress / encrypt),
+  (b) decide where data goes (shard / route / replicate), or
+  (c) touch the transport (send/receive).
+
+``connect_wrap(inner)`` composes a Chunnel over an inner Datapath, mirroring the
+paper's ChunnelTransformer/ChunnelDatapath split. Datapath type safety is
+enforced at stack-assembly time via WireTypes (the Rust-compile-time check is a
+Python raise-at-build-time check here — both happen before any data flows).
+
+Two chunnel families share this interface:
+  * host chunnels  — move Python messages over the host fabric (pub/sub,
+    routing, reliability, ordering): the paper's §7 application plane.
+  * step chunnels  — transform the jitted training/serving step dataflow
+    (gradient wire formats, collective schedules): the TPU "transport" plane.
+    Their connect_wrap composes *trace-time*, so like Rust monomorphization the
+    compiled program carries zero dynamic-dispatch overhead (verified in
+    benchmarks/bench_overhead.py).
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Optional, Sequence
+
+from repro.core.capability import CapabilitySet
+
+
+@dataclass(frozen=True)
+class WireType:
+    """Datapath data type, e.g. WireType('grads', dtype='f32')."""
+
+    name: str
+    attrs: tuple = ()  # sorted (key, value) pairs
+
+    @staticmethod
+    def of(name: str, **attrs) -> "WireType":
+        return WireType(name, tuple(sorted(attrs.items())))
+
+    def __str__(self) -> str:
+        a = ",".join(f"{k}={v}" for k, v in self.attrs)
+        return f"{self.name}[{a}]" if a else self.name
+
+
+ANY = WireType.of("any")
+
+
+def types_match(a: WireType, b: WireType) -> bool:
+    return ANY in (a, b) or a == b
+
+
+class Datapath(abc.ABC):
+    """A live connection endpoint (the paper's ChunnelDatapath)."""
+
+    @abc.abstractmethod
+    def send(self, msgs: Iterable[Any]) -> None: ...
+
+    @abc.abstractmethod
+    def recv(self, buf: list, timeout: Optional[float] = None) -> int:
+        """Fill ``buf`` with received messages; return count."""
+
+    def close(self) -> None:
+        pass
+
+
+class Chunnel(abc.ABC):
+    """The paper's ChunnelTransformer: wraps an inner Datapath with new
+    functionality and reports type/capability metadata for negotiation."""
+
+    #: data type accepted from the layer above / produced to the layer below
+    upper_type: WireType = ANY
+    lower_type: WireType = ANY
+    #: True if replacing this chunnel requires agreement among all endpoints
+    multilateral: bool = False
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+    def capabilities(self) -> CapabilitySet:
+        """Relative-compatibility labels (Bertha §5.2); opaque to the runtime."""
+        return CapabilitySet.exact(self.name)
+
+    @abc.abstractmethod
+    def connect_wrap(self, inner: Optional[Datapath]) -> Datapath: ...
+
+    def migrate_state(self, old: Optional[Datapath]) -> dict:
+        """Extract transferable connection state from the implementation being
+        replaced (Bertha §4.2 step 2). Default: nothing to carry."""
+        return {}
+
+    def fingerprint(self) -> str:
+        caps = ";".join(sorted(str(c) for c in self.capabilities()))
+        return f"{self.name}({caps})<{self.upper_type}->{self.lower_type}>"
+
+    def __repr__(self) -> str:
+        return self.name
+
+
+@dataclass
+class FnChunnel(Chunnel):
+    """Convenience: build a transform chunnel from send/recv functions."""
+
+    fn_name: str = "FnChunnel"
+    on_send: Any = None
+    on_recv: Any = None
+    upper: WireType = ANY
+    lower: WireType = ANY
+    caps: Optional[CapabilitySet] = None
+    multilateral_: bool = False
+
+    def __post_init__(self):
+        self.upper_type = self.upper
+        self.lower_type = self.lower
+        self.multilateral = self.multilateral_
+
+    @property
+    def name(self) -> str:
+        return self.fn_name
+
+    def capabilities(self) -> CapabilitySet:
+        return self.caps if self.caps is not None else CapabilitySet.exact(self.name)
+
+    def connect_wrap(self, inner: Optional[Datapath]) -> Datapath:
+        return _FnDatapath(self, inner)
+
+
+class _FnDatapath(Datapath):
+    def __init__(self, ch: FnChunnel, inner: Optional[Datapath]):
+        self.ch = ch
+        self.inner = inner
+
+    def send(self, msgs):
+        out = [self.ch.on_send(m) if self.ch.on_send else m for m in msgs]
+        if self.inner is not None:
+            self.inner.send(out)
+
+    def recv(self, buf, timeout=None):
+        if self.inner is None:
+            return 0
+        n = self.inner.recv(buf, timeout)
+        if self.ch.on_recv:
+            for i in range(n):
+                buf[i] = self.ch.on_recv(buf[i])
+        return n

@@ -1,0 +1,174 @@
+"""In-process host fabric: the 'network' under host-level chunnels.
+
+Best-effort datagram delivery between named endpoints with configurable
+latency and loss (so the negotiation protocol's reliability layer is exercised
+for real). Used by the §7-style application benchmarks and the negotiation /
+reconfiguration protocols; the tensor math itself rides the JAX mesh.
+"""
+from __future__ import annotations
+
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclass
+class LinkModel:
+    latency_s: float = 0.0
+    jitter_s: float = 0.0
+    loss: float = 0.0  # probability a datagram is dropped
+
+
+class Endpoint:
+    def __init__(self, addr: str, fabric: "Fabric"):
+        self.addr = addr
+        self.fabric = fabric
+        self.inbox: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+
+    def send(self, dst: str, msg: Any) -> None:
+        self.fabric.send(self.addr, dst, msg)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Tuple[str, Any]]:
+        try:
+            return self.inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def close(self) -> None:
+        self.fabric.unregister(self.addr)
+
+
+class Fabric:
+    def __init__(self, *, default_link: LinkModel | None = None, seed: int = 0):
+        self._eps: Dict[str, Endpoint] = {}
+        self._links: Dict[Tuple[str, str], LinkModel] = {}
+        self._default = default_link or LinkModel()
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.sent_bytes = 0
+        self.sent_msgs = 0
+
+    def register(self, addr: str) -> Endpoint:
+        with self._lock:
+            if addr in self._eps:
+                raise ValueError(f"address in use: {addr}")
+            ep = Endpoint(addr, self)
+            self._eps[addr] = ep
+            return ep
+
+    def unregister(self, addr: str) -> None:
+        with self._lock:
+            self._eps.pop(addr, None)
+
+    def set_link(self, src: str, dst: str, model: LinkModel) -> None:
+        self._links[(src, dst)] = model
+
+    def _model(self, src: str, dst: str) -> LinkModel:
+        return self._links.get((src, dst), self._default)
+
+    def send(self, src: str, dst: str, msg: Any) -> None:
+        m = self._model(src, dst)
+        with self._lock:
+            if m.loss and self._rng.random() < m.loss:
+                return  # best-effort: dropped
+            ep = self._eps.get(dst)
+            self.sent_msgs += 1
+            self.sent_bytes += _approx_size(msg)
+        if ep is None:
+            return  # unroutable: best-effort
+        delay = m.latency_s + (self._rng.random() * m.jitter_s if m.jitter_s else 0.0)
+        if delay > 0:
+            t = threading.Timer(delay, ep.inbox.put, args=((src, msg),))
+            t.daemon = True
+            t.start()
+        else:
+            ep.inbox.put((src, msg))
+
+
+def _approx_size(msg: Any) -> int:
+    if isinstance(msg, (bytes, bytearray)):
+        return len(msg)
+    if isinstance(msg, str):
+        return len(msg)
+    if isinstance(msg, dict):
+        return sum(_approx_size(k) + _approx_size(v) for k, v in msg.items())
+    if isinstance(msg, (list, tuple)):
+        return sum(_approx_size(v) for v in msg)
+    return 8
+
+
+import itertools
+
+# Sequence numbers are process-global and monotonic so a fresh channel between
+# the same endpoints can never collide with the receiver's dedupe window.
+_GLOBAL_SEQ = itertools.count(1)
+_GLOBAL_SEQ_LOCK = threading.Lock()
+
+
+def _next_seq() -> int:
+    with _GLOBAL_SEQ_LOCK:
+        return next(_GLOBAL_SEQ)
+
+
+class ReliableChannel:
+    """Stop-and-wait reliability + ordering over the best-effort fabric —
+    Bertha §5.1: 'a simple reliability and ordering protocol ... used for
+    negotiation'. Application chunnels bring their own reliability."""
+
+    def __init__(self, ep: Endpoint, peer: str, *, timeout: float = 0.05, retries: int = 40):
+        self.ep = ep
+        self.peer = peer
+        self.timeout = timeout
+        self.retries = retries
+        self._rx_seq: Dict[str, int] = {}
+        self._reply_cache: Dict[Tuple[str, int], Any] = {}
+        self._pending: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+
+    def request(self, msg: Any) -> Any:
+        """Send reliably and wait for the (piggybacked) reply."""
+        seq = _next_seq()
+        frame = {"_seq": seq, "body": msg}
+        for _ in range(self.retries):
+            self.ep.send(self.peer, frame)
+            deadline = time.monotonic() + self.timeout
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                got = self.ep.recv(timeout=remaining)
+                if got is None:
+                    break
+                src, m = got
+                if isinstance(m, dict) and m.get("_ack") == seq and src == self.peer:
+                    return m["body"]
+                self._pending.put((src, m))
+        raise TimeoutError(f"no reply from {self.peer} after {self.retries} retries")
+
+    def serve_one(self, handler: Callable[[str, Any], Any], timeout: Optional[float] = None) -> bool:
+        """Receive one reliable frame, dedupe, reply via handler."""
+        got = None
+        try:
+            got = self._pending.get_nowait()
+        except queue.Empty:
+            got = self.ep.recv(timeout=timeout)
+        if got is None:
+            return False
+        src, m = got
+        if not (isinstance(m, dict) and "_seq" in m):
+            return False
+        seq = m["_seq"]
+        last = self._rx_seq.get(src, 0)
+        if seq > last:
+            reply = handler(src, m["body"])
+            self._reply_cache[(src, seq)] = reply
+            self._reply_cache.pop((src, seq - 8), None)  # bounded cache
+        else:
+            # Retransmission (our ack was lost): resend the cached reply so the
+            # handler observes exactly-once semantics.
+            reply = self._reply_cache.get((src, seq))
+        self._rx_seq[src] = max(last, seq)
+        self.ep.send(src, {"_ack": seq, "body": reply})
+        return True

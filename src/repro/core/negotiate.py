@@ -1,0 +1,138 @@
+"""Point-to-point negotiation (Bertha §5.1–§5.2) + zero-RTT resumption (§6.1).
+
+Client sends its Chunnel-stack options over the base connection; the server
+picks a compatible concrete stack (capability comparison, §5.2) honoring its
+own preference order; both sides then instantiate via recursive connect_wrap.
+A returned nonce encodes the chosen select branches (used e.g. by the §7.3
+load-balancer to inform backends).
+
+Zero-RTT: the client caches the negotiated fingerprint per (peer, offer) and
+optimistically instantiates it while the server confirms or proposes a
+replacement (QUIC-0RTT-style, §6.1).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.capability import CapabilitySet
+from repro.core.fabric import ReliableChannel
+from repro.core.stack import ConcreteStack, Stack, offered_capabilities
+
+
+class NegotiationError(RuntimeError):
+    pass
+
+
+def _nonce(server_fp: str, client_fp: str) -> str:
+    return hashlib.sha256(f"{server_fp}||{client_fp}".encode()).hexdigest()[:16]
+
+
+def pick_compatible(server_stack: Stack, client_offer: list) -> Optional[Tuple[ConcreteStack, int]]:
+    """Server side of §5.2: first server option (server preference) compatible
+    with a client option (client preference as tiebreak). Returns
+    (server_choice, client_option_index) or None."""
+    client_caps = offered_capabilities(client_offer)
+    for s_opt in server_stack.options():
+        s_caps = s_opt.capabilities()
+        for idx, c_caps in enumerate(client_caps):
+            if s_caps.compatible_with(c_caps):
+                return s_opt, idx
+    return None
+
+
+@dataclass
+class NegotiatedConn:
+    stack: ConcreteStack
+    nonce: str
+    zero_rtt: bool = False
+
+
+class ZeroRttCache:
+    """client-side: (peer, offer-digest) -> fingerprint of the agreed stack."""
+
+    def __init__(self):
+        self._cache: Dict[Tuple[str, str], str] = {}
+
+    @staticmethod
+    def _key(peer: str, stack: Stack) -> Tuple[str, str]:
+        digest = hashlib.sha256(
+            "||".join(s.fingerprint() for s in stack.options()).encode()
+        ).hexdigest()[:16]
+        return (peer, digest)
+
+    def get(self, peer: str, stack: Stack) -> Optional[str]:
+        return self._cache.get(self._key(peer, stack))
+
+    def put(self, peer: str, stack: Stack, fp: str) -> None:
+        self._cache[self._key(peer, stack)] = fp
+
+    def invalidate(self, peer: str, stack: Stack) -> None:
+        self._cache.pop(self._key(peer, stack), None)
+
+
+def client_negotiate(
+    chan: ReliableChannel,
+    stack: Stack,
+    cache: Optional[ZeroRttCache] = None,
+) -> NegotiatedConn:
+    peer = chan.peer
+    if cache is not None:
+        fp = cache.get(peer, stack)
+        if fp is not None and stack.find(fp) is not None:
+            reply = chan.request({"type": "zero_rtt", "fp": fp})
+            if reply.get("type") == "zero_rtt_ok":
+                return NegotiatedConn(stack.find(fp), reply["nonce"], zero_rtt=True)
+            if reply.get("type") == "negotiate_failed":
+                cache.invalidate(peer, stack)  # tear down; fall through to 1-RTT
+            # else: fall through
+
+    offer = stack.offer()
+    reply = chan.request({"type": "offer", "options": offer})
+    if reply.get("type") == "reject":
+        raise NegotiationError(f"server rejected: {reply.get('reason')}")
+    if reply.get("type") != "accept":
+        raise NegotiationError(f"unexpected reply: {reply}")
+    chosen = stack.options()[reply["client_idx"]]
+    if cache is not None:
+        cache.put(peer, stack, chosen.fingerprint())
+    return NegotiatedConn(chosen, reply["nonce"])
+
+
+class ServerNegotiator:
+    """Server-side handler; plug into a HostAgent's message loop."""
+
+    def __init__(self, stack: Stack):
+        self.stack = stack
+        self._last: Dict[str, str] = {}  # peer -> negotiated client fp (for 0-RTT)
+        self.negotiated: Dict[str, ConcreteStack] = {}  # peer -> server stack
+
+    def handle(self, src: str, msg: dict) -> dict:
+        t = msg.get("type")
+        if t == "offer":
+            picked = pick_compatible(self.stack, msg["options"])
+            if picked is None:
+                return {"type": "reject", "reason": "no compatible stack"}
+            s_opt, c_idx = picked
+            # Reconstruct the client fp from its offer for 0-RTT resumption.
+            client_fp_src = repr(msg["options"][c_idx])
+            self._last[src] = client_fp_src
+            self.negotiated[src] = s_opt
+            return {
+                "type": "accept",
+                "client_idx": c_idx,
+                "server_fp": s_opt.fingerprint(),
+                "nonce": _nonce(s_opt.fingerprint(), client_fp_src),
+            }
+        if t == "zero_rtt":
+            # Server re-validates that a stack compatible with the cached choice
+            # is still available (its own Select preferences may have changed).
+            for s_opt in self.stack.options():
+                if src in self.negotiated and s_opt.fingerprint() == self.negotiated[src].fingerprint():
+                    return {
+                        "type": "zero_rtt_ok",
+                        "nonce": _nonce(s_opt.fingerprint(), msg["fp"]),
+                    }
+            return {"type": "negotiate_failed", "proposal": self.stack.offer()[:1]}
+        return {"type": "reject", "reason": f"unknown message {t}"}

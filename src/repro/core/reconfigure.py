@@ -1,0 +1,193 @@
+"""Runtime reconfiguration (Bertha §4, §6.2).
+
+Replacing a chunnel implementation in a live connection requires a *switch
+point* after which no thread uses the old datapath or its state. Two
+coordination mechanisms, both implemented and microbenchmarked
+(benchmarks/bench_reconfigure.py ~ paper Fig. 10):
+
+  LockedConn   every send/recv takes a mutex; reconfigure() holds it across
+               negotiation + state migration + swap. Simple; fast-path pays a
+               lock per op.
+  BarrierConn  fast path reads one boolean; reconfigure() raises the flag,
+               waits for all data threads to park at a barrier (stop-the-world
+               moment), swaps, releases. Near-zero fast-path cost; larger
+               switch blip.
+
+Multilateral chunnels additionally run a two-phase commit across peers while
+the switch-point is held (negotiation uses the connection, so the barrier/lock
+must protect it — §6.2).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+from repro.core.chunnel import Datapath
+from repro.core.stack import ConcreteStack
+
+
+@dataclass
+class ReconfigStats:
+    switches: int = 0
+    last_switch_s: float = 0.0
+    total_blocked_s: float = 0.0
+
+
+class ConnHandle:
+    """Shared API of both mechanisms."""
+
+    def __init__(self, stack: ConcreteStack):
+        self.stack = stack
+        self.dp: Datapath = stack.instantiate()
+        self.stats = ReconfigStats()
+
+    # -- data plane -----------------------------------------------------------
+    def send(self, msgs) -> None:
+        raise NotImplementedError
+
+    def recv(self, buf, timeout=None) -> int:
+        raise NotImplementedError
+
+    # -- control plane --------------------------------------------------------
+    def reconfigure(self, new_stack: ConcreteStack,
+                    coordinate: Optional[Callable[[], bool]] = None) -> bool:
+        """Switch to ``new_stack``. ``coordinate`` runs *inside* the switch
+        point (for multilateral 2PC); returning False aborts the switch."""
+        raise NotImplementedError
+
+    def _do_swap(self, new_stack: ConcreteStack) -> None:
+        # Bertha Fig. 3: ② migrate state old -> new, ③ swap implementation.
+        state = {}
+        for old_ch, new_ch in zip(self.stack.chunnels, new_stack.chunnels):
+            if type(old_ch) is not type(new_ch):
+                state.update(new_ch.migrate_state(self.dp))
+        old_dp = self.dp
+        self.dp = new_stack.instantiate()
+        if state and hasattr(self.dp, "restore_state"):
+            self.dp.restore_state(state)
+        if hasattr(old_dp, "close"):
+            old_dp.close()
+        self.stack = new_stack
+        self.stats.switches += 1
+
+
+class LockedConn(ConnHandle):
+    def __init__(self, stack: ConcreteStack):
+        super().__init__(stack)
+        self._lock = threading.Lock()
+
+    def send(self, msgs):
+        with self._lock:
+            self.dp.send(msgs)
+
+    def recv(self, buf, timeout=None):
+        with self._lock:
+            return self.dp.recv(buf, timeout)
+
+    def reconfigure(self, new_stack, coordinate=None):
+        t0 = time.perf_counter()
+        with self._lock:  # switch point = lock release
+            if coordinate is not None and not coordinate():
+                return False
+            self._do_swap(new_stack)
+        self.stats.last_switch_s = time.perf_counter() - t0
+        return True
+
+
+class BarrierConn(ConnHandle):
+    """Lock-free fast path (§6.2): one boolean read per op; stop-the-world
+    barrier only during a reconfiguration."""
+
+    def __init__(self, stack: ConcreteStack, n_threads: int = 1):
+        super().__init__(stack)
+        self.n_threads = n_threads
+        self._pause = False  # plain attribute read: GIL-atomic
+        self._barrier = threading.Barrier(n_threads + 1)
+        self._resume = threading.Event()
+        self._resume.set()
+
+    def _checkpoint(self):
+        if self._pause:
+            t0 = time.perf_counter()
+            self._barrier.wait()
+            self._resume.wait()
+            self.stats.total_blocked_s += time.perf_counter() - t0
+
+    def send(self, msgs):
+        self._checkpoint()
+        self.dp.send(msgs)
+
+    def recv(self, buf, timeout=None):
+        self._checkpoint()
+        return self.dp.recv(buf, timeout)
+
+    def reconfigure(self, new_stack, coordinate=None):
+        t0 = time.perf_counter()
+        self._resume.clear()
+        self._pause = True
+        self._barrier.wait()  # all data threads parked: the switch point
+        try:
+            if coordinate is not None and not coordinate():
+                return False
+            self._do_swap(new_stack)
+            return True
+        finally:
+            self._pause = False
+            self._barrier.reset()
+            self._resume.set()
+            self.stats.last_switch_s = time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Multilateral two-phase commit between connection peers (§4.2)
+# ---------------------------------------------------------------------------
+
+
+def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str],
+                     new_fp: str, *, timeout_s: float = 2.0) -> bool:
+    """Coordinator side. chan_request(peer, msg) -> reply (reliable).
+    All peers must accept for the transition to commit; any refusal or timeout
+    aborts (a faulty peer cannot force others to switch)."""
+    ready = []
+    for p in peers:
+        try:
+            r = chan_request(p, {"type": "reconfig_prepare", "fp": new_fp})
+        except TimeoutError:
+            r = {"type": "reconfig_refuse"}
+        if r.get("type") != "reconfig_ready":
+            for q in ready:
+                chan_request(q, {"type": "reconfig_abort", "fp": new_fp})
+            return False
+        ready.append(p)
+    for p in peers:
+        chan_request(p, {"type": "reconfig_commit", "fp": new_fp})
+    return True
+
+
+class ReconfigParticipant:
+    """Peer side of the 2PC; wire into the host agent's message loop."""
+
+    def __init__(self, handle: ConnHandle, resolve: Callable[[str], Optional[ConcreteStack]]):
+        self.handle = handle
+        self.resolve = resolve  # fp -> ConcreteStack we could switch to
+        self._prepared: Optional[str] = None
+
+    def handle_msg(self, src: str, msg: dict) -> dict:
+        t = msg.get("type")
+        if t == "reconfig_prepare":
+            st = self.resolve(msg["fp"])
+            if st is None:
+                return {"type": "reconfig_refuse"}
+            self._prepared = msg["fp"]
+            return {"type": "reconfig_ready"}
+        if t == "reconfig_commit" and self._prepared == msg["fp"]:
+            st = self.resolve(msg["fp"])
+            self.handle.reconfigure(st)
+            self._prepared = None
+            return {"type": "reconfig_done"}
+        if t == "reconfig_abort":
+            self._prepared = None
+            return {"type": "reconfig_aborted"}
+        return {"type": "reconfig_refuse"}

@@ -1,0 +1,173 @@
+"""Host agents: the Bertha runtime gluing fabric + negotiation + reconfiguration.
+
+A HostAgent owns a fabric endpoint and a listener thread. Servers register a
+Stack; clients ``connect(addr, stack)`` which negotiates (§5) and returns a
+reconfigurable ConnHandle (§4). In the training framework each participating
+host runs one agent; negotiation guarantees every host compiles the *same*
+step-function stack — the SPMD-safety property that makes Bertha's
+compatibility checking load-bearing on a TPU cluster.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from repro.core.chunnel import Chunnel, Datapath, WireType
+from repro.core.fabric import Endpoint, Fabric, ReliableChannel
+from repro.core.negotiate import (
+    NegotiatedConn,
+    NegotiationError,
+    ServerNegotiator,
+    ZeroRttCache,
+    client_negotiate,
+)
+from repro.core.reconfigure import BarrierConn, ConnHandle, LockedConn, ReconfigParticipant
+from repro.core.stack import ConcreteStack, Stack
+
+BYTES = WireType.of("bytes")
+
+
+class FabricTransport(Chunnel):
+    """Bottom-of-stack transport over the host fabric (bootstraps from unit
+    type, like the paper's KernelUdpChunnel)."""
+
+    upper_type = BYTES
+    lower_type = WireType.of("unit")
+
+    def __init__(self, ep: Endpoint, peer: str, label: str = "FabricTransport"):
+        self.ep = ep
+        self.peer = peer
+        self._label = label
+
+    @property
+    def name(self) -> str:
+        return self._label
+
+    def connect_wrap(self, inner: Optional[Datapath]) -> Datapath:
+        assert inner is None, "transport chunnels bootstrap from the unit type"
+        return _FabricDatapath(self.ep, self.peer)
+
+
+class _FabricDatapath(Datapath):
+    def __init__(self, ep: Endpoint, peer: str):
+        self.ep = ep
+        self.peer = peer
+
+    def send(self, msgs: Iterable[Any]) -> None:
+        for m in msgs:
+            self.ep.send(self.peer, {"_data": m})
+
+    def recv(self, buf: list, timeout: Optional[float] = None) -> int:
+        n = 0
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while n < len(buf):
+            t = None if deadline is None else max(0.0, deadline - time.monotonic())
+            got = self.ep.recv(timeout=t)
+            if got is None:
+                break
+            _, m = got
+            if isinstance(m, dict) and "_data" in m:
+                buf[n] = m["_data"]
+                n += 1
+                deadline = time.monotonic()  # drain whatever is queued
+        return n
+
+
+class HostAgent:
+    def __init__(self, fabric: Fabric, addr: str, *, mechanism: str = "lock",
+                 n_data_threads: int = 1):
+        self.fabric = fabric
+        self.addr = addr
+        self.ep = fabric.register(addr)
+        self.ctrl = fabric.register(addr + "/ctrl")
+        self.mechanism = mechanism
+        self.n_data_threads = n_data_threads
+        self.zero_rtt = ZeroRttCache()
+        self._negotiator: Optional[ServerNegotiator] = None
+        self._participants: Dict[str, ReconfigParticipant] = {}
+        self._handlers: Dict[str, Callable[[str, dict], dict]] = {}
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # -- server side -----------------------------------------------------------
+    def listen(self, stack: Stack) -> ServerNegotiator:
+        self._negotiator = ServerNegotiator(stack)
+        return self._negotiator
+
+    def on(self, msg_type: str, handler: Callable[[str, dict], dict]) -> None:
+        self._handlers[msg_type] = handler
+
+    def _dispatch(self, src: str, body: dict) -> dict:
+        t = body.get("type", "")
+        if t in ("offer", "zero_rtt"):
+            if self._negotiator is None:
+                return {"type": "reject", "reason": "not listening"}
+            return self._negotiator.handle(src, body)
+        if t.startswith("reconfig_"):
+            part = self._participants.get(body.get("conn", ""))
+            if part is None and self._participants:
+                part = next(iter(self._participants.values()))
+            if part is None:
+                return {"type": "reconfig_refuse"}
+            return part.handle_msg(src, body)
+        h = self._handlers.get(t)
+        if h is not None:
+            return h(src, body)
+        return {"type": "error", "reason": f"no handler for {t!r}"}
+
+    def _loop(self) -> None:
+        chan = ReliableChannel(self.ctrl, peer="*")
+        while not self._stop.is_set():
+            chan.serve_one(self._dispatch, timeout=0.05)
+
+    # -- client side -----------------------------------------------------------
+    def connect(self, peer: str, stack: Stack, *, use_zero_rtt: bool = False) -> ConnHandle:
+        chan = ReliableChannel(self.ep, peer + "/ctrl")
+        neg = client_negotiate(chan, stack, self.zero_rtt if use_zero_rtt else None)
+        handle = self._make_handle(neg.stack)
+        handle.nonce = neg.nonce
+        handle.was_zero_rtt = neg.zero_rtt
+        handle.source_stack = stack
+        return handle
+
+    def accept_stack(self, peer: str) -> Optional[ConcreteStack]:
+        if self._negotiator is None:
+            return None
+        return self._negotiator.negotiated.get(peer)
+
+    def _make_handle(self, concrete: ConcreteStack) -> ConnHandle:
+        if self.mechanism == "barrier":
+            return BarrierConn(concrete, n_threads=self.n_data_threads)
+        return LockedConn(concrete)
+
+    def register_participant(self, conn_id: str, handle: ConnHandle,
+                             resolve: Callable[[str], Optional[ConcreteStack]]) -> None:
+        self._participants[conn_id] = ReconfigParticipant(handle, resolve)
+
+    def request(self, peer: str, msg: dict, *, timeout: float = 0.1, retries: int = 40) -> dict:
+        chan = ReliableChannel(self.ep, peer + "/ctrl", timeout=timeout, retries=retries)
+        return chan.request(msg)
+
+    def reconfigure_multilateral(self, handle: ConnHandle, new_stack: ConcreteStack,
+                                 peers: List[str], conn_id: str) -> bool:
+        """Unilateral swap + 2PC with peers, run inside the switch point
+        (§4.2: negotiation happens while the lock/barrier is held)."""
+        from repro.core.reconfigure import two_phase_commit
+
+        def coordinate() -> bool:
+            return two_phase_commit(
+                lambda p, m: self.request(p, {**m, "conn": conn_id}),
+                peers, new_stack.fingerprint(),
+            )
+
+        return handle.reconfigure(new_stack, coordinate=coordinate)
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=1.0)
+        self.ep.close()
+        self.ctrl.close()

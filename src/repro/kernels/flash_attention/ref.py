@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense masked softmax)."""
+from __future__ import annotations
+
+from repro.models.attention import attention_dense
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    return attention_dense(q, k, v, causal=causal, window=window)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the int8 block-quantization kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_blocks_ref(x2d: jnp.ndarray, *, block: int = 256):
+    amax = jnp.max(jnp.abs(x2d), axis=1)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x2d / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_blocks_ref(q: jnp.ndarray, scales: jnp.ndarray, *, block: int = 256):
+    return q.astype(jnp.float32) * scales[:, None]

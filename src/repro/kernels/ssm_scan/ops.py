@@ -1,0 +1,12 @@
+"""jit'd public wrapper; interpret on CPU, compiled Mosaic on TPU."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_chunk as _scan
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def ssm_scan_chunk(a, bx, h0):
+    return _scan(a, bx, h0, interpret=INTERPRET)

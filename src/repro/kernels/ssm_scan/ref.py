@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: the associative-scan chunk from repro/models/ssm.py."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _scan_chunk
+
+
+def ssm_scan_chunk_ref(a, bx, h0):
+    """a, bx: (B, C, d_in, N); h0: (B, d_in, N) -> (h_seq, h_last)."""
+    a_t = a.transpose(1, 0, 2, 3)
+    bx_t = bx.transpose(1, 0, 2, 3)
+    h_all, h_last = _scan_chunk(a_t.astype(jnp.float32), bx_t.astype(jnp.float32),
+                                h0.astype(jnp.float32))
+    return h_all.transpose(1, 0, 2, 3), h_last

@@ -1,0 +1,27 @@
+"""Production mesh builders (assignment-mandated shapes).
+
+Functions, not module constants, so importing never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_link_bw": 50e9,  # B/s per link (~ ICI)
+    "ici_links": 4,  # torus links per chip usable for a collective
+    "dcn_bw": 25e9,  # B/s per chip across pods (DCN tier)
+}

@@ -1,0 +1,188 @@
+"""Attention implementations (a Bertha Select: xla_dense | xla_chunked | pallas).
+
+All variants share one numerics contract, tested against each other:
+  q: (B, Sq, H, hd), k/v: (B, Skv, KH, hd), H % KH == 0 (GQA)
+  returns (B, Sq, H, hd)
+
+``xla_dense``   materializes (B,H,Sq,Skv) scores — smoke tests / small seqs.
+``xla_chunked`` online-softmax scan over KV blocks — the at-scale default; lives
+                entirely in jnp so the 512-device dry-run lowers it.
+``pallas``      TPU flash-attention kernel (kernels/flash_attention), validated
+                against xla_dense in interpret mode; selected on real TPUs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(qpos, kpos, *, causal: bool, window: Optional[int], kv_len: Optional[int]):
+    """Additive mask bias (qlen, klen) in fp32."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        ok &= kpos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _expand_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(B, S, KH, hd) -> (B, S, KH*group, hd) by repeating each kv head."""
+    if group == 1:
+        return x
+    return jnp.repeat(x, group, axis=2)
+
+
+def attention_dense(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len=None,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    k = _expand_kv(k, H // KH)
+    v = _expand_kv(v, H // KH)
+    scale = hd**-0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    scores = scores + _mask_bias(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    q_offset=0,
+    kv_len=None,
+) -> jnp.ndarray:
+    """Memory-efficient online-softmax attention: scan over KV chunks.
+
+    Live memory is O(Sq * chunk) per head instead of O(Sq * Skv). The scan body
+    computes full (masked) scores for its chunk; causal masking therefore costs
+    ~2x the minimal causal FLOPs — the Pallas kernel removes that on TPU
+    (see EXPERIMENTS.md §Perf).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    group = H // KH
+    scale = hd**-0.5
+
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = k.shape[1] // chunk
+    ks = k.reshape(B, n, chunk, KH, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n, chunk, KH, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n) * chunk
+
+    qpos = q_offset + jnp.arange(Sq)
+    qf = q.astype(jnp.bfloat16)
+    limit = Skv if kv_len is None else kv_len
+
+    # checkpoint: recompute the (B,H,Sq,chunk) scores in backward instead of
+    # stacking them per scan step (flash-attention-style backward).
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, start = xs
+        k_c = _expand_kv(k_c, group)
+        v_c = _expand_kv(v_c, group)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_c.astype(jnp.bfloat16))
+        s = s.astype(jnp.float32) * scale
+        kpos = start + jnp.arange(chunk)
+        s = s + _mask_bias(qpos, kpos, causal=causal, window=window, kv_len=limit)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(jnp.bfloat16), v_c.astype(jnp.bfloat16))
+        acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, starts))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    impl: str = "xla_chunked",
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    q_offset=0,
+    kv_len=None,
+):
+    if impl == "xla_dense":
+        return attention_dense(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, kv_len=kv_len
+        )
+    if impl == "xla_chunked":
+        return attention_chunked(
+            q, k, v, causal=causal, window=window, chunk=chunk, q_offset=q_offset, kv_len=kv_len
+        )
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_local(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, KH, hd)
+    v_cache: jnp.ndarray,
+    cache_len,  # scalar or (B,) number of valid cache entries
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Reference decode attention with a fully local cache.
+
+    The production sequence-sharded variant (flash-decode partial-softmax
+    combine across the model axis) lives in repro/comm/kvshard.py and is tested
+    against this oracle.
+    """
+    B, _, H, hd = q.shape
+    KH = k_cache.shape[2]
+    k = _expand_kv(k_cache, H // KH)
+    v = _expand_kv(v_cache, H // KH)
+    scale = hd**-0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    valid = kpos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    if window is not None:
+        valid &= kpos[None, :] >= jnp.asarray(cache_len).reshape(-1, 1) - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)

@@ -1,0 +1,209 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The audio frontend is a STUB per the assignment: the batch carries precomputed
+frame embeddings (B, S_src, D) — input_specs() provides them — standing in for
+the conv feature extractor. Encoder is bidirectional; decoder is causal with
+cross-attention. Decode caches both self-KV (growing) and cross-KV (static).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import pshard
+from repro.models import transformer as T
+from repro.models.stacking import apply_stack, apply_stack_with_cache, stacked_init
+
+
+def enc_layer_init(rng, cfg: ModelConfig):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": T.attn_block_init(r1, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(r2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def dec_layer_init(rng, cfg: ModelConfig):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "self_attn": T.attn_block_init(r1, cfg),
+        "lnx": L.norm_init(cfg.d_model, cfg.norm),
+        "cross_attn": T.attn_block_init(r2, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(r3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(rng, cfg: ModelConfig):
+    r_emb, r_enc, r_dec, r_head, r_src = jax.random.split(rng, 5)
+    e = cfg.encdec
+    return {
+        "embed": L.embedding_init(r_emb, cfg.vocab_padded, cfg.d_model),
+        "src_proj": L.linear_init(r_src, cfg.frontend.embed_dim, cfg.d_model),
+        "encoder": stacked_init(enc_layer_init, r_enc, e.enc_layers, cfg),
+        "enc_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "decoder": stacked_init(dec_layer_init, r_dec, e.dec_layers, cfg),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "lm_head": L.linear_init(r_head, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_src, E) stub embeddings -> encoder output (B, S_src, D)."""
+    x = L.linear(params["src_proj"], frames)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(p, h):
+        hn = L.apply_norm(p["ln1"], h, eps=cfg.norm_eps)
+        q, k, v = T.qkv(p["attn"], hn, cfg, positions)
+        o = attn.attention(q, k, v, impl=cfg.attn_impl, causal=False, chunk=cfg.attn_chunk)
+        h = h + L.linear(p["attn"]["wo"], o.reshape(h.shape[0], h.shape[1], -1))
+        return pshard.shard_activations(
+            h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act))
+
+    x = apply_stack(params["encoder"], x, lambda p, h: body(p, h),
+                    num_layers=cfg.encdec.enc_layers, scan=cfg.scan_layers, remat=cfg.remat)
+    return L.apply_norm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig):
+    B, Ss, _ = enc_out.shape
+    hd = cfg.head_dim_
+    k = L.linear(p["wk"], enc_out).reshape(B, Ss, cfg.num_kv_heads, hd)
+    v = L.linear(p["wv"], enc_out).reshape(B, Ss, cfg.num_kv_heads, hd)
+    return k, v  # no rope on cross-attention
+
+
+def _cross_attend(p, h, k, v, cfg: ModelConfig):
+    B, St, _ = h.shape
+    hd = cfg.head_dim_
+    q = L.linear(p["wq"], h).reshape(B, St, cfg.num_heads, hd)
+    o = attn.attention(q, k, v, impl=cfg.attn_impl, causal=False, chunk=cfg.attn_chunk)
+    return L.linear(p["wo"], o.reshape(B, St, -1))
+
+
+def decode_states(params, tokens, enc_out, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(p, h):
+        hn = L.apply_norm(p["ln1"], h, eps=cfg.norm_eps)
+        q, k, v = T.qkv(p["self_attn"], hn, cfg, positions)
+        o = attn.attention(q, k, v, impl=cfg.attn_impl, causal=True, chunk=cfg.attn_chunk)
+        h = h + L.linear(p["self_attn"]["wo"], o.reshape(h.shape[0], h.shape[1], -1))
+        ck, cv = _cross_kv(p["cross_attn"], enc_out, cfg)
+        h = h + _cross_attend(p["cross_attn"], L.apply_norm(p["lnx"], h, eps=cfg.norm_eps),
+                              ck, cv, cfg)
+        return pshard.shard_activations(
+            h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act))
+
+    x = apply_stack(params["decoder"], x, lambda p, h: body(p, h),
+                    num_layers=cfg.encdec.dec_layers, scan=cfg.scan_layers, remat=cfg.remat)
+    return L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, loss_chunk=None):
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decode_states(params, batch["tokens"], enc_out, cfg)
+    chunk = loss_chunk if loss_chunk is not None else cfg.loss_chunk
+    return L.chunked_lm_loss(h, params["lm_head"]["w"], batch["labels"], chunk=chunk,
+                             real_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, src_len: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim_
+    e = cfg.encdec
+    kv = lambda s: jnp.zeros((e.dec_layers, batch, s, cfg.num_kv_heads, hd), dtype)
+    return {
+        "k": kv(capacity), "v": kv(capacity),
+        "xk": kv(src_len), "xv": kv(src_len),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int, src_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity, src_len, dtype))
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Encoder pass + decoder prompt pass; returns (cache, last logits)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(St)
+
+    def body(p, h, cache_l):
+        hn = L.apply_norm(p["ln1"], h, eps=cfg.norm_eps)
+        q, k, v = T.qkv(p["self_attn"], hn, cfg, positions)
+        o = attn.attention(q, k, v, impl=cfg.attn_impl, causal=True, chunk=cfg.attn_chunk)
+        h = h + L.linear(p["self_attn"]["wo"], o.reshape(B, St, -1))
+        ck, cv = _cross_kv(p["cross_attn"], enc_out, cfg)
+        h = h + _cross_attend(p["cross_attn"], L.apply_norm(p["lnx"], h, eps=cfg.norm_eps),
+                              ck, cv, cfg)
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act)
+        return h, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+                   "xk": ck.astype(jnp.bfloat16), "xv": cv.astype(jnp.bfloat16)}
+
+    empty = {n: jnp.zeros((cfg.encdec.dec_layers, 0), jnp.bfloat16) for n in ("k", "v", "xk", "xv")}
+    x, cache = apply_stack_with_cache(
+        params["decoder"], x, empty, lambda p, h, c: body(p, h, c),
+        num_layers=cfg.encdec.dec_layers, scan=cfg.scan_layers, remat="none",
+    )
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ params["lm_head"]["w"].astype(x.dtype), cfg.vocab_size)
+    return {**cache, "len": jnp.asarray(St, jnp.int32)}, logits
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, *, attn_fn=None):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = cache["len"]
+    x = L.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    attn_fn = attn_fn or (
+        lambda q, kc, vc, n, window: attn.decode_attention_local(q, kc, vc, n, window=window)
+    )
+
+    def body(p, h, cache_l):
+        hn = L.apply_norm(p["ln1"], h, eps=cfg.norm_eps)
+        q, k, v = T.qkv(p["self_attn"], hn, cfg, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k.astype(cache_l["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v.astype(cache_l["v"].dtype), pos, axis=1)
+        o = attn_fn(q, k_cache, v_cache, pos + 1, None)
+        h = h + L.linear(p["self_attn"]["wo"], o.reshape(B, 1, -1))
+        # static cross-attention over the cached encoder KV
+        hd = cfg.head_dim_
+        qx = L.linear(p["cross_attn"]["wq"],
+                      L.apply_norm(p["lnx"], h, eps=cfg.norm_eps)).reshape(
+                          B, 1, cfg.num_heads, hd)
+        ox = attn.decode_attention_local(qx, cache_l["xk"], cache_l["xv"],
+                                         cache_l["xk"].shape[1])
+        h = h + L.linear(p["cross_attn"]["wo"], ox.reshape(B, 1, -1))
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act)
+        return h, {"k": k_cache, "v": v_cache, "xk": cache_l["xk"], "xv": cache_l["xv"]}
+
+    x, new_cache = apply_stack_with_cache(
+        params["decoder"], x,
+        {n: cache[n] for n in ("k", "v", "xk", "xv")},
+        lambda p, h, c: body(p, h, c),
+        num_layers=cfg.encdec.dec_layers, scan=cfg.scan_layers, remat="none",
+    )
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ params["lm_head"]["w"].astype(x.dtype), cfg.vocab_size)
+    return {**new_cache, "len": pos + 1}, logits

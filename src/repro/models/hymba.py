@@ -1,0 +1,202 @@
+"""Hymba: hybrid-head LM — parallel attention + SSM branches per layer
+(arXiv:2411.13676), SWA(window) everywhere except 3 global layers.
+
+Uniform per-layer param structure (attn + ssm + mlp), so training scans layer
+segments; decode unrolls layers (heterogeneous caches: ring-buffer KV for SWA
+layers, full KV for global layers, SSM state for every layer).
+Sub-quadratic => long_500k runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import pshard
+from repro.models import ssm
+from repro.models import transformer as T
+from repro.models.stacking import apply_stack, make_segments, stacked_init
+
+
+def hymba_layer_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": T.attn_block_init(r[0], cfg),
+        "ssm": ssm.ssm_init(r[1], cfg.d_model, cfg.ssm),
+        "gn_attn": L.norm_init(cfg.d_model, cfg.norm),
+        "gn_ssm": L.norm_init(cfg.d_model, cfg.norm),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(r[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(rng, cfg: ModelConfig):
+    return T.init_params(rng, cfg, layer_init=hymba_layer_init)
+
+
+def hymba_layer(p, x, cfg: ModelConfig, positions, *, window=None):
+    """Parallel attention + SSM branches; normalized-mean fusion (hymba §2)."""
+    xn = L.apply_norm(p["ln1"], x, eps=cfg.norm_eps)
+    a = T.attn_block(p["attn"], xn, cfg, positions, window=window)
+    s, _ = ssm.ssm_apply(p["ssm"], xn, cfg.ssm)
+    fused = 0.5 * (
+        L.apply_norm(p["gn_attn"], a, eps=cfg.norm_eps)
+        + L.apply_norm(p["gn_ssm"], s, eps=cfg.norm_eps)
+    )
+    h = x + fused
+    return pshard.shard_activations(
+        h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act))
+
+
+def segments(cfg: ModelConfig):
+    return make_segments(
+        cfg.num_layers,
+        cfg.global_layers,
+        special_kw={"window": None},
+        default_kw={"window": cfg.sliding_window},
+    )
+
+
+def hidden_states(params, tokens, cfg: ModelConfig):
+    x = pshard.shard_activations(L.embed(params["embed"], tokens))
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(p, h, **kw):
+        return hymba_layer(p, h, cfg, positions, **kw)
+
+    x = apply_stack(
+        params["layers"], x, body,
+        segments=segments(cfg), num_layers=cfg.num_layers,
+        scan=cfg.scan_layers, remat=cfg.remat,
+    )
+    return L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, loss_chunk=None):
+    h = hidden_states(params, batch["tokens"], cfg)
+    chunk = loss_chunk if loss_chunk is not None else cfg.loss_chunk
+    return L.chunked_lm_loss(h, T.head_weight(params, cfg), batch["labels"], chunk=chunk,
+                             real_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving — heterogeneous caches, unrolled layers
+# ---------------------------------------------------------------------------
+
+
+def _kv_capacity(idx: int, cfg: ModelConfig, seq_cap: int) -> int:
+    if idx in cfg.global_layers:
+        return seq_cap
+    return min(cfg.sliding_window, seq_cap)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim_
+    layers = []
+    for idx in range(cfg.num_layers):
+        cap = _kv_capacity(idx, cfg, capacity)
+        st = ssm.init_state(batch, cfg.d_model, cfg.ssm)
+        layers.append({
+            "k": jnp.zeros((batch, cap, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, cap, cfg.num_kv_heads, hd), dtype),
+            "ssm_h": st.h,
+            "ssm_conv": st.conv,
+        })
+    return {"layers": layers, "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity, dtype))
+
+
+def _decode_layer(p, x, cache_l, cfg: ModelConfig, pos, *, is_global: bool, attn_fn=None):
+    B = x.shape[0]
+    xn = L.apply_norm(p["ln1"], x, eps=cfg.norm_eps)
+    positions = pos + jnp.arange(1)
+    q, k, v = T.qkv(p["attn"], xn, cfg, positions)
+    cap = cache_l["k"].shape[1]
+    write = pos if is_global else pos % cap  # ring buffer for SWA layers
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], k.astype(cache_l["k"].dtype), write, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], v.astype(cache_l["v"].dtype), write, axis=1)
+    n_valid = jnp.minimum(pos + 1, cap)
+    if attn_fn is not None and is_global:
+        o = attn_fn(q, k_cache, v_cache, n_valid, None)
+    else:
+        o = attn.decode_attention_local(q, k_cache, v_cache, n_valid)
+    a = L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+    s, st_new = ssm.ssm_decode(
+        p["ssm"], xn, cfg.ssm, ssm.SSMState(h=cache_l["ssm_h"], conv=cache_l["ssm_conv"])
+    )
+    fused = 0.5 * (
+        L.apply_norm(p["gn_attn"], a, eps=cfg.norm_eps)
+        + L.apply_norm(p["gn_ssm"], s, eps=cfg.norm_eps)
+    )
+    h = x + fused
+    h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act)
+    new_cache = {"k": k_cache, "v": v_cache, "ssm_h": st_new.h, "ssm_conv": st_new.conv}
+    return h, new_cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, *, attn_fn=None):
+    pos = cache["len"]
+    x = L.embed(params["embed"], batch["tokens"])
+    new_layers = []
+    for idx in range(cfg.num_layers):
+        p_l = jax.tree.map(lambda a: a[idx], params["layers"])
+        x, c_new = _decode_layer(
+            p_l, x, cache["layers"][idx], cfg, pos,
+            is_global=idx in cfg.global_layers, attn_fn=attn_fn,
+        )
+        new_layers.append(c_new)
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ T.head_weight(params, cfg).astype(x.dtype), cfg.vocab_size)
+    return {"layers": new_layers, "len": pos + 1}, logits
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Prompt processing: full hidden states + caches for continuation."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S)
+    new_layers = []
+    for idx in range(cfg.num_layers):
+        p_l = jax.tree.map(lambda a: a[idx], params["layers"])
+        is_global = idx in cfg.global_layers
+        window = None if is_global else cfg.sliding_window
+        xn = L.apply_norm(p_l["ln1"], x, eps=cfg.norm_eps)
+        q, k, v = T.qkv(p_l["attn"], xn, cfg, positions)
+        o = attn.attention(q, k, v, impl=cfg.attn_impl, causal=True, window=window,
+                           chunk=cfg.attn_chunk)
+        a = L.linear(p_l["attn"]["wo"], o.reshape(B, S, -1))
+        s, st_new = ssm.ssm_apply(p_l["ssm"], xn, cfg.ssm)
+        fused = 0.5 * (
+            L.apply_norm(p_l["gn_attn"], a, eps=cfg.norm_eps)
+            + L.apply_norm(p_l["gn_ssm"], s, eps=cfg.norm_eps)
+        )
+        x = x + fused
+        x = x + L.mlp(p_l["mlp"], L.apply_norm(p_l["ln2"], x, eps=cfg.norm_eps), act=cfg.act)
+        cap = _kv_capacity(idx, cfg, S)
+        kk, vv = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+        if not is_global and S > cap:
+            # Keep the last `window` entries, ring-aligned so slot = pos % cap.
+            keep_start = S - cap
+            kk, vv = kk[:, keep_start:], vv[:, keep_start:]
+            # kk[i] holds position S-cap+i; slot j must hold position with
+            # pos % cap == j  =>  out[j] = kk[(j - (S-cap)) % cap]
+            roll = (S - cap) % cap
+            kk = jnp.roll(kk, roll, axis=1)
+            vv = jnp.roll(vv, roll, axis=1)
+        new_layers.append({
+            "k": kk, "v": vv, "ssm_h": st_new.h, "ssm_conv": st_new.conv,
+        })
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ T.head_weight(params, cfg).astype(x.dtype), cfg.vocab_size)
+    return {"layers": new_layers, "len": jnp.asarray(S, jnp.int32)}, logits

@@ -1,0 +1,175 @@
+"""Core parameterized layers (functional, explicit param pytrees).
+
+Params are nested dicts of fp32 arrays; forward passes cast to the config's
+compute dtype (bf16 on TPU). No framework dependency — pure jax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def truncated_normal_init(rng, shape, scale: float = 0.02, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype)
+
+
+def linear_init(rng, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None):
+    w_rng, _ = jax.random.split(rng)
+    scale = scale if scale is not None else d_in**-0.5
+    p = {"w": truncated_normal_init(w_rng, (d_in, d_out), scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x, dtype=jnp.bfloat16):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, *, eps: float = 1e-6, dtype=jnp.bfloat16):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(dtype)
+
+
+def embedding_init(rng, vocab: int, d: int):
+    return {"table": truncated_normal_init(rng, (vocab, d), 0.02)}
+
+
+def embed(p, tokens, dtype=jnp.bfloat16):
+    return p["table"].astype(dtype)[tokens]
+
+
+def mlp_init(rng, d: int, f: int, gated: bool = True):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {
+        "up": linear_init(r2, d, f),
+        "down": linear_init(r3, f, d, scale=f**-0.5),
+    }
+    if gated:
+        p["gate"] = linear_init(r1, d, f)
+    return p
+
+
+def mlp(p, x, act: str = "silu", dtype=jnp.bfloat16):
+    """SwiGLU / GeGLU (gated) or classic 2-matrix feed-forward."""
+    u = linear(p["up"], x, dtype)
+    if "gate" in p:
+        g = linear(p["gate"], x, dtype)
+        a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        return linear(p["down"], a * u, dtype)
+    a = jax.nn.silu(u) if act == "silu" else jax.nn.gelu(u)
+    return linear(p["down"], a, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def mask_padded_vocab(logits: jnp.ndarray, real_vocab: int) -> jnp.ndarray:
+    """-inf at padded vocab columns (vocab_padded > vocab_size)."""
+    V = logits.shape[-1]
+    if V == real_vocab:
+        return logits
+    idx = jax.lax.broadcasted_iota(jnp.int32, (V,), 0)
+    return jnp.where(idx < real_vocab, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          real_vocab: int | None = None) -> jnp.ndarray:
+    """logits: (..., V) fp; labels: (...) int32. Returns mean loss (fp32)."""
+    logits = logits.astype(jnp.float32)
+    if real_vocab is not None:
+        logits = mask_padded_vocab(logits, real_vocab)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_lm_loss(
+    h: jnp.ndarray,
+    head_w: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    chunk: Optional[int] = None,
+    dtype=jnp.bfloat16,
+    real_vocab: Optional[int] = None,
+) -> jnp.ndarray:
+    """Cross-entropy over a (possibly huge) vocab without materializing all logits.
+
+    h: (B, S, D) final hidden states; head_w: (D, V); labels: (B, S).
+    When ``chunk`` divides S, scans over sequence chunks so the live logits are
+    (B, chunk, V). chunk=None computes unchunked (used by roofline flop probes so
+    the lm-head matmul is not hidden inside a while loop body).
+    """
+    from repro.models import pshard
+
+    B, S, D = h.shape
+    h = pshard.shard_batch(h)
+    if chunk is None or chunk >= S:
+        logits = h.astype(dtype) @ head_w.astype(dtype)
+        return softmax_cross_entropy(logits, labels, real_vocab)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    # checkpoint: recompute the (B, chunk, V) logits in backward instead of
+    # stacking them across scan steps (that residual is n x B x chunk x V).
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, lc = xs
+        hc = pshard.shard_batch(hc)
+        logits = hc.astype(dtype) @ head_w.astype(dtype)
+        logits = logits.astype(jnp.float32)
+        if real_vocab is not None:
+            logits = mask_padded_vocab(logits, real_vocab)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * S)

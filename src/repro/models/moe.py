@@ -1,0 +1,461 @@
+"""Mixture-of-Experts transformer (qwen3-moe, dbrx).
+
+The expert-dispatch layer is a Bertha Select between chunnels with different
+collective schedules (see repro/comm/moe_dispatch.py for the negotiation side):
+
+  dense      weighted einsum over ALL experts — tiny-config oracle
+  grouped    capacity-based gather/scatter dispatch, sharding left to the XLA
+             partitioner (paper-faithful "kernel stack" default)
+  alltoall   explicit expert-parallel all-to-all over the 'model' axis
+  allgather  each rank computes its local experts for all tokens, psum combine
+
+All variants share the routing math and are tested for agreement.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import pshard
+from repro.models import transformer as T
+from repro.models.stacking import apply_stack, apply_stack_with_cache, stacked_init
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def moe_mlp_init(rng, cfg: ModelConfig):
+    m = cfg.moe
+    r = jax.random.split(rng, 4)
+    E, D, F = m.num_experts, cfg.d_model, m.d_ff_expert
+    s_in, s_out = D**-0.5, F**-0.5
+    return {
+        "router": {"w": L.truncated_normal_init(r[0], (D, E), s_in)},
+        "gate": L.truncated_normal_init(r[1], (E, D, F), s_in),
+        "up": L.truncated_normal_init(r[2], (E, D, F), s_in),
+        "down": L.truncated_normal_init(r[3], (E, F, D), s_out),
+    }
+
+
+def moe_layer_init(rng, cfg: ModelConfig):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": T.attn_block_init(r1, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "moe": moe_mlp_init(r2, cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Routing (shared by all dispatch chunnels)
+# ---------------------------------------------------------------------------
+
+
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    return max(1, int(math.ceil(num_tokens * m.top_k * m.capacity_factor / m.num_experts)))
+
+
+def route(router_p, x2d, cfg: ModelConfig):
+    """x2d: (T, D). Returns (gates (T,k), expert_ids (T,k) i32, aux_loss)."""
+    m = cfg.moe
+    logits = x2d.astype(jnp.float32) @ router_p["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e fraction_e * router_prob_e
+    onehot = jax.nn.one_hot(expert_ids[:, 0], m.num_experts, dtype=jnp.float32)
+    frac = jnp.mean(onehot, axis=0)
+    aux = m.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0)) * AUX_LOSS_COEF
+    return gate_vals, expert_ids, aux
+
+
+def _positions_in_expert(expert_ids, E: int, C: int):
+    """Capacity assignment. expert_ids: (T, k) -> pos (T, k) i32, keep (T, k) bool."""
+    Tn, k = expert_ids.shape
+    flat = expert_ids.reshape(-1)  # (T*k,) — token-major, slot-minor priority
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)  # (T*k, E)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # pos within expert queue
+    pos = jnp.sum(pos_flat, axis=-1).reshape(Tn, k)
+    keep = pos < C
+    return pos, keep
+
+
+def expert_ffn(p, x, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Batched expert SwiGLU. x: (E, C, D) -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", x.astype(dtype), p["gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", x.astype(dtype), p["up"].astype(dtype))
+    a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("ecf,efd->ecd", a * u, p["down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch chunnels
+# ---------------------------------------------------------------------------
+
+
+def dispatch_dense(p, x2d, cfg: ModelConfig):
+    """Oracle: compute every expert for every token (tiny configs only)."""
+    gates, ids, aux = route(p["router"], x2d, cfg)
+    m = cfg.moe
+    dtype = jnp.bfloat16
+    g = jnp.einsum("td,edf->tef", x2d.astype(dtype), p["gate"].astype(dtype))
+    u = jnp.einsum("td,edf->tef", x2d.astype(dtype), p["up"].astype(dtype))
+    a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    y_all = jnp.einsum("tef,efd->ted", a * u, p["down"].astype(dtype))  # (T, E, D)
+    dense_gates = jnp.sum(
+        jax.nn.one_hot(ids, m.num_experts, dtype=jnp.float32) * gates[..., None], axis=1
+    )  # (T, E)
+    y = jnp.einsum("ted,te->td", y_all.astype(jnp.float32), dense_gates)
+    return y.astype(x2d.dtype), aux
+
+
+def _gather_scatter_ffn(p, x2d, gates, ids, cfg: ModelConfig, C: int):
+    """Shared capacity gather -> expert ffn -> scatter combine. x2d: (T, D)."""
+    Tn, D = x2d.shape
+    E = cfg.moe.num_experts
+    pos, keep = _positions_in_expert(ids, E, C)
+    tok_idx = jnp.broadcast_to(jnp.arange(Tn)[:, None], ids.shape)
+    # Sentinel row T gathers zeros for dropped/empty slots.
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, D), x2d.dtype)], axis=0)
+    slot_tok = jnp.full((E, C), Tn, jnp.int32)
+    slot_tok = slot_tok.at[ids.reshape(-1), pos.reshape(-1)].set(
+        jnp.where(keep.reshape(-1), tok_idx.reshape(-1), Tn), mode="drop"
+    )
+    x_sorted = x_pad[slot_tok]  # (E, C, D)
+    y_sorted = expert_ffn(p, x_sorted, cfg)  # (E, C, D)
+    y_tk = y_sorted[ids, pos]  # (T, k, D)
+    w = (gates * keep).astype(jnp.float32)
+    return jnp.einsum("tkd,tk->td", y_tk.astype(jnp.float32), w).astype(x2d.dtype)
+
+
+def dispatch_grouped(p, x2d, cfg: ModelConfig):
+    """Capacity dispatch; collective schedule left to the XLA partitioner."""
+    gates, ids, aux = route(p["router"], x2d, cfg)
+    C = capacity(x2d.shape[0], cfg)
+    return _gather_scatter_ffn(p, x2d, gates, ids, cfg, C), aux
+
+
+def _token_axes(mesh):
+    """All batch-ish axes tokens are split over inside the manual region: the
+    pod axis (when present) must be manual too, or the partitioner falls back
+    to 'involuntary full rematerialization' reshards at the region boundary."""
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _gathered_weights(router_w, gate_w, up_w, down_w, data_axis):
+    """ZeRO-3 inside the manual region: params arrive FSDP-sharded on their
+    d_model dim over ``data_axis``; all-gather working copies (bf16 for the
+    expert banks) so each rank computes with full-D weights."""
+    ag = lambda a, ax: jax.lax.all_gather(a, data_axis, axis=ax, tiled=True)
+    return (
+        ag(router_w.astype(jnp.float32), 0),          # (D, E)
+        ag(gate_w.astype(jnp.bfloat16), 1),           # (E_loc, D, F)
+        ag(up_w.astype(jnp.bfloat16), 1),
+        ag(down_w.astype(jnp.bfloat16), 2),           # (E_loc, F, D)
+    )
+
+
+def _route_and_sort(x_loc, router_w, cfg, E):
+    """Local routing + capacity sort. x_loc: (T_loc, D) -> (E, C, D) bf16."""
+    Ts = x_loc.shape[0]
+    gates, ids, aux = route({"w": router_w}, x_loc, cfg)
+    C = capacity(Ts, cfg)
+    pos, keep = _positions_in_expert(ids, E, C)
+    tok_idx = jnp.broadcast_to(jnp.arange(Ts)[:, None], ids.shape)
+    x_pad = jnp.concatenate([x_loc, jnp.zeros((1, x_loc.shape[1]), x_loc.dtype)], 0)
+    slot_tok = jnp.full((E, C), Ts, jnp.int32)
+    slot_tok = slot_tok.at[ids.reshape(-1), pos.reshape(-1)].set(
+        jnp.where(keep.reshape(-1), tok_idx.reshape(-1), Ts), mode="drop"
+    )
+    x_sorted = x_pad[slot_tok].astype(jnp.bfloat16)  # (E, C, D)
+    return x_sorted, gates, ids, pos, keep, C, aux
+
+
+def dispatch_alltoall(p, x3d, cfg: ModelConfig, mesh, axis: str = "model",
+                      data_axis: str = "data"):
+    """Explicit expert-parallel all-to-all, fully manual over (data, model).
+
+    Tokens are partitioned over data x model (T/256 per chip); each chip routes
+    its slice, all-to-alls capacity buffers to the expert owners along the
+    model axis, computes its E/|model| experts (with ZeRO-gathered weights),
+    and all-to-alls back. No tensor is ever replicated over either axis.
+    """
+    n = mesh.shape[axis]
+    E = cfg.moe.num_experts
+    assert E % n == 0, (E, n)
+
+    def inner(x3d, router_w, gate_w, up_w, down_w):
+        # local flatten: (B_loc, S_loc, D) -> (T_cell, D); the in_spec matches
+        # the sequence-parallel activation layout exactly, so the region
+        # boundary moves no data at all.
+        B_l, S_l, D_l = x3d.shape
+        x_loc = x3d.reshape(B_l * S_l, D_l)
+        router_w, gate_w, up_w, down_w = _gathered_weights(
+            router_w, gate_w, up_w, down_w, data_axis)
+        x_sorted, gates, ids, pos, keep, C, aux = _route_and_sort(
+            x_loc, router_w, cfg, E)
+        # (n, E_loc, C, D) --a2a--> indexed by source rank
+        x_send = x_sorted.reshape(n, E // n, C, -1)
+        x_recv = jax.lax.all_to_all(x_send, axis, split_axis=0, concat_axis=0, tiled=False)
+        x_pe = x_recv.transpose(1, 0, 2, 3).reshape(E // n, n * C, -1)
+        y_pe = expert_ffn({"gate": gate_w, "up": up_w, "down": down_w}, x_pe, cfg)
+        y_send = y_pe.reshape(E // n, n, C, -1).transpose(1, 0, 2, 3)
+        y_recv = jax.lax.all_to_all(y_send, axis, split_axis=0, concat_axis=0, tiled=False)
+        y_sorted = y_recv.reshape(E, C, -1)  # back in this rank's slot order
+        y_tk = y_sorted[ids, pos]
+        w = (gates * keep).astype(jnp.float32)
+        y_loc = jnp.einsum("tkd,tk->td", y_tk.astype(jnp.float32), w)
+        aux = jax.lax.pmean(jax.lax.pmean(aux, axis), data_axis)
+        return y_loc.reshape(B_l, S_l, D_l).astype(x3d.dtype), aux
+
+    tok_axes = _token_axes(mesh)
+    b_axes = _batch_axes(mesh)
+    f = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            P(b_axes, axis, None),                  # (B, S, D) in SP layout
+            P(data_axis, None),                     # router (D, E); pod-replicated
+            P(axis, data_axis, None),               # gate (E, D, F)
+            P(axis, data_axis, None),               # up
+            P(axis, None, data_axis),               # down (E, F, D)
+        ),
+        out_specs=(P(b_axes, axis, None), P()),
+        check_vma=False,
+        axis_names=set(tok_axes),
+    )
+    return f(x3d, p["router"]["w"], p["gate"], p["up"], p["down"])
+
+
+def dispatch_allgather(p, x3d, cfg: ModelConfig, mesh, axis: str = "model",
+                       data_axis: str = "data"):
+    """Each model-rank computes its local experts for its data-row's tokens:
+    tokens are all-gathered along the model axis (instead of a2a'd), partial
+    outputs psum'd back. More collective bytes than a2a for top_k << E, but no
+    routing-dependent traffic — a latency-stable alternative (the Select's
+    second branch)."""
+    n = mesh.shape[axis]
+    E = cfg.moe.num_experts
+    assert E % n == 0
+    E_loc = E // n
+
+    def inner(x3d, router_w, gate_w, up_w, down_w):
+        B_l, S_l, D_l = x3d.shape
+        x_loc = x3d.reshape(B_l * S_l, D_l)
+        router_w, gate_w, up_w, down_w = _gathered_weights(
+            router_w, gate_w, up_w, down_w, data_axis)
+        rank = jax.lax.axis_index(axis)
+        # gather this data-row's tokens along the model axis (bf16 wire)
+        x_row = jax.lax.all_gather(x_loc.astype(jnp.bfloat16), axis, axis=0, tiled=True)
+        Tn = x_row.shape[0]
+        gates, ids, aux = route({"w": router_w}, x_row.astype(jnp.float32), cfg)
+        C = capacity(Tn, cfg)
+        pos, keep = _positions_in_expert(ids, E, C)
+        local = (ids // E_loc) == rank
+        keep_loc = keep & local
+        ids_loc = ids - rank * E_loc
+        tok_idx = jnp.broadcast_to(jnp.arange(Tn)[:, None], ids.shape)
+        x_pad = jnp.concatenate([x_row, jnp.zeros((1, x_row.shape[1]), x_row.dtype)], 0)
+        slot_tok = jnp.full((E_loc, C), Tn, jnp.int32)
+        slot_tok = slot_tok.at[
+            jnp.where(keep_loc, ids_loc, E_loc).reshape(-1), pos.reshape(-1)
+        ].set(tok_idx.reshape(-1), mode="drop")
+        x_sorted = x_pad[slot_tok].astype(jnp.bfloat16)
+        y_sorted = expert_ffn({"gate": gate_w, "up": up_w, "down": down_w}, x_sorted, cfg)
+        y_tk = y_sorted[jnp.where(keep_loc, ids_loc, 0), pos]
+        w = (gates * keep_loc).astype(jnp.float32)
+        y_part = jnp.einsum("tkd,tk->td", y_tk.astype(jnp.float32), w)
+        y_row = jax.lax.psum(y_part, axis)  # (Tn, D)
+        # keep only this rank's slice of the row
+        Ts = Tn // n
+        y_loc = jax.lax.dynamic_slice_in_dim(y_row, rank * Ts, Ts, axis=0)
+        aux = jax.lax.pmean(jax.lax.pmean(aux, axis), data_axis)
+        return y_loc.reshape(B_l, S_l, D_l).astype(x3d.dtype), aux
+
+    tok_axes = _token_axes(mesh)
+    b_axes = _batch_axes(mesh)
+    f = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            P(b_axes, axis, None),
+            P(data_axis, None),
+            P(axis, data_axis, None),
+            P(axis, data_axis, None),
+            P(axis, None, data_axis),
+        ),
+        out_specs=(P(b_axes, axis, None), P()),
+        check_vma=False,
+        axis_names=set(tok_axes),
+    )
+    return f(x3d, p["router"]["w"], p["gate"], p["up"], p["down"])
+
+
+def moe_ffn(p, x3d, cfg: ModelConfig, mesh=None):
+    """Dispatch Select resolution (negotiated upstream; see comm/moe_dispatch).
+
+    x3d: (B, S, D) in the sequence-parallel layout. Returns ((B, S, D), aux).
+    """
+    impl = cfg.moe.dispatch
+    B, S, D = x3d.shape
+    axes = getattr(mesh, "axis_names", ()) if mesh is not None else ()
+    n_batch, n_model = 1, axes and mesh.shape.get("model", 1) or 1
+    for a in ("pod", "data"):
+        if a in axes:
+            n_batch *= mesh.shape[a]
+    manual_ok = (
+        mesh is not None and "model" in axes and "data" in axes
+        and B % max(n_batch, 1) == 0 and S % max(n_model, 1) == 0
+        and cfg.moe.num_experts % mesh.shape["model"] == 0
+    )
+    if impl in ("dense", "grouped") or not manual_ok:
+        impl = impl if impl in ("dense", "grouped") else "grouped"
+        x2d = x3d.reshape(B * S, D)
+        y, aux = (dispatch_dense(p, x2d, cfg) if impl == "dense"
+                  else dispatch_grouped(p, x2d, cfg))
+        return y.reshape(B, S, D), aux
+    # XLA-CPU workaround: a bf16 operand crossing a partial-manual shard_map
+    # boundary crashes the CPU backend under grad ("Invalid binary instruction
+    # opcode copy"; bisected: norm->bf16->shard_map in a checkpointed scan).
+    # Cross the boundary in f32 — the dispatch internals cast to bf16 before
+    # every collective, so wire bytes are unchanged. Revisit on TPU backends.
+    dt = x3d.dtype
+    x3d = x3d.astype(jnp.float32)
+    if impl == "alltoall":
+        y, aux = dispatch_alltoall(p, x3d, cfg, mesh)
+    elif impl == "allgather":
+        y, aux = dispatch_allgather(p, x3d, cfg, mesh)
+    else:
+        raise ValueError(f"unknown moe dispatch {impl!r}")
+    return y.astype(dt), aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(p, carry, cfg: ModelConfig, positions, *, window=None, mesh=None):
+    x, aux_acc = carry
+    B, S, D = x.shape
+    h = x + T.attn_block(p["attn"], L.apply_norm(p["ln1"], x, eps=cfg.norm_eps), cfg, positions,
+                         window=window)
+    y, aux = moe_ffn(p["moe"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), cfg, mesh)
+    return (pshard.shard_activations(h + y), aux_acc + aux)
+
+
+def init_params(rng, cfg: ModelConfig):
+    return T.init_params(rng, cfg, layer_init=moe_layer_init)
+
+
+def hidden_states(params, tokens, cfg: ModelConfig, *, mesh=None, extra_embeds=None):
+    x = L.embed(params["embed"], tokens)
+    if extra_embeds is not None:
+        Pn = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x[:, Pn:]], axis=1)
+    x = pshard.shard_activations(x)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(p, carry, **kw):
+        return moe_layer(p, carry, cfg, positions, mesh=mesh, **kw)
+
+    x, aux = apply_stack(
+        params["layers"], (x, jnp.zeros((), jnp.float32)), body,
+        num_layers=cfg.num_layers, scan=cfg.scan_layers, remat=cfg.remat, remat_group=cfg.remat_group,
+        static={"window": cfg.sliding_window},
+    )
+    return L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, mesh=None, loss_chunk: Optional[int] = None):
+    h, aux = hidden_states(params, batch["tokens"], cfg, mesh=mesh)
+    chunk = loss_chunk if loss_chunk is not None else cfg.loss_chunk
+    lm = L.chunked_lm_loss(h, T.head_weight(params, cfg), batch["labels"], chunk=chunk,
+                           real_vocab=cfg.vocab_size)
+    return lm + aux
+
+
+init_cache = T.init_cache
+cache_specs = T.cache_specs
+
+
+def prefill(params, batch, cfg: ModelConfig, *, mesh=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S)
+
+    def body(p, carry, cache_l, **kw):
+        h, aux_acc = carry
+        q, k, v = T.qkv(p["attn"], L.apply_norm(p["ln1"], h, eps=cfg.norm_eps), cfg, positions)
+        o = attn.attention(q, k, v, impl=cfg.attn_impl, causal=True, chunk=cfg.attn_chunk, **kw)
+        h = h + L.linear(p["attn"]["wo"], o.reshape(B, S, -1))
+        y, aux = moe_ffn(p["moe"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), cfg, mesh)
+        return (pshard.shard_activations(h + y), aux_acc + aux), {
+            "k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)
+        }
+
+    empty = {"k": jnp.zeros((cfg.num_layers, 0), jnp.bfloat16),
+             "v": jnp.zeros((cfg.num_layers, 0), jnp.bfloat16)}
+    (x, _aux), kv_cache = apply_stack_with_cache(
+        params["layers"], (x, jnp.zeros((), jnp.float32)), empty, body,
+        num_layers=cfg.num_layers, scan=cfg.scan_layers, remat="none",
+        static={"window": cfg.sliding_window},
+    )
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ T.head_weight(params, cfg).astype(x.dtype), cfg.vocab_size)
+    return {"k": kv_cache["k"], "v": kv_cache["v"], "len": jnp.asarray(S, jnp.int32)}, logits
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, *, mesh=None, attn_fn=None):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = cache["len"]
+    x = L.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    attn_fn = attn_fn or (
+        lambda q, kc, vc, n_valid, window: attn.decode_attention_local(
+            q, kc, vc, n_valid, window=window
+        )
+    )
+
+    def body(p, carry, cache_l, **kw):
+        h, aux_acc = carry
+        q, k, v = T.qkv(p["attn"], L.apply_norm(p["ln1"], h, eps=cfg.norm_eps), cfg, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k.astype(cache_l["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v.astype(cache_l["v"].dtype), pos, axis=1)
+        o = attn_fn(q, k_cache, v_cache, pos + 1, kw.get("window"))
+        h = h + L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+        y, aux = moe_ffn(p["moe"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), cfg, mesh)
+        return (h + y, aux_acc + aux), {"k": k_cache, "v": v_cache}
+
+    (x, _aux), new_kv = apply_stack_with_cache(
+        params["layers"], (x, jnp.zeros((), jnp.float32)),
+        {"k": cache["k"], "v": cache["v"]}, body,
+        num_layers=cfg.num_layers, scan=cfg.scan_layers, remat="none",
+        static={"window": cfg.sliding_window},
+    )
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ T.head_weight(params, cfg).astype(x.dtype), cfg.vocab_size)
+    return {"k": new_kv["k"], "v": new_kv["v"], "len": pos + 1}, logits

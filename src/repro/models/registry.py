@@ -1,0 +1,204 @@
+"""Uniform Model API over all assigned families.
+
+    model = build(cfg, mesh=None)
+    params = model.init(rng)
+    loss   = model.loss(params, batch)
+    cache, logits = model.prefill(params, batch)
+    cache, logits = model.decode(params, cache, batch)
+
+Batch contents per family (input_specs in launch/dryrun.py mirrors this):
+  dense/moe/ssm/hybrid: tokens, labels
+  vlm:   + patches (B, P, D) stub CLIP embeddings (first P positions)
+  audio: + frames (B, S_src, E) stub conv features; tokens are decoder tokens
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingConfig
+from repro.models import encdec, hymba, moe, sharding, transformer, xlstm
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    mesh: Any = None
+    decode_attn_fn: Optional[Callable] = None  # KV-partition chunnel slot
+
+    # -- construction -------------------------------------------------------
+    def init(self, rng):
+        return _family(self.cfg).init(rng, self.cfg)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_specs(self, sh: ShardingConfig):
+        return sharding.param_specs(self.param_shapes(), sh, self.mesh)
+
+    # -- steps ---------------------------------------------------------------
+    def loss(self, params, batch):
+        return _family(self.cfg).loss(params, batch, self.cfg, self.mesh)
+
+    def prefill(self, params, batch):
+        return _family(self.cfg).prefill(params, batch, self.cfg, self.mesh)
+
+    def decode(self, params, cache, batch):
+        return _family(self.cfg).decode(
+            params, cache, batch, self.cfg, self.mesh, self.decode_attn_fn
+        )
+
+    # -- shapes ---------------------------------------------------------------
+    def batch_specs(self, shape: ShapeConfig, *, dtype=jnp.int32):
+        return _family(self.cfg).batch_specs(self.cfg, shape)
+
+    def cache_specs(self, shape: ShapeConfig):
+        return _family(self.cfg).cache_specs(self.cfg, shape)
+
+    def init_cache(self, batch: int, capacity: int):
+        return _family(self.cfg).init_cache(self.cfg, batch, capacity)
+
+
+@dataclass
+class _Family:
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    batch_specs: Callable
+    cache_specs: Callable
+    init_cache: Callable
+
+
+def _tok_specs(cfg, shape, *, decode=False):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if decode:
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "labels": jax.ShapeDtypeStruct((B, S), i32),
+    }
+
+
+# -- dense ------------------------------------------------------------------
+
+_DENSE = _Family(
+    init=lambda rng, cfg: transformer.init_params(rng, cfg),
+    loss=lambda p, b, cfg, mesh: transformer.loss_fn(p, b, cfg),
+    prefill=lambda p, b, cfg, mesh: transformer.prefill(p, b, cfg),
+    decode=lambda p, c, b, cfg, mesh, afn: transformer.decode_step(p, c, b, cfg, attn_fn=afn),
+    batch_specs=lambda cfg, shape: _tok_specs(cfg, shape, decode=shape.kind == "decode"),
+    cache_specs=lambda cfg, shape: transformer.cache_specs(
+        cfg, shape.global_batch, shape.seq_len
+    ),
+    init_cache=lambda cfg, batch, cap: transformer.init_cache(cfg, batch, cap),
+)
+
+# -- moe ----------------------------------------------------------------------
+
+_MOE = _Family(
+    init=lambda rng, cfg: moe.init_params(rng, cfg),
+    loss=lambda p, b, cfg, mesh: moe.loss_fn(p, b, cfg, mesh=mesh),
+    prefill=lambda p, b, cfg, mesh: moe.prefill(p, b, cfg, mesh=mesh),
+    decode=lambda p, c, b, cfg, mesh, afn: moe.decode_step(p, c, b, cfg, mesh=mesh, attn_fn=afn),
+    batch_specs=_DENSE.batch_specs,
+    cache_specs=_DENSE.cache_specs,
+    init_cache=_DENSE.init_cache,
+)
+
+# -- ssm (xlstm) ---------------------------------------------------------------
+
+_SSM = _Family(
+    init=lambda rng, cfg: xlstm.init_params(rng, cfg),
+    loss=lambda p, b, cfg, mesh: xlstm.loss_fn(p, b, cfg),
+    prefill=lambda p, b, cfg, mesh: xlstm.prefill(p, b, cfg),
+    decode=lambda p, c, b, cfg, mesh, afn: xlstm.decode_step(p, c, b, cfg),
+    batch_specs=_DENSE.batch_specs,
+    cache_specs=lambda cfg, shape: xlstm.state_specs(cfg, shape.global_batch),
+    init_cache=lambda cfg, batch, cap: xlstm.init_state(cfg, batch),
+)
+
+# -- hybrid (hymba) -------------------------------------------------------------
+
+_HYBRID = _Family(
+    init=lambda rng, cfg: hymba.init_params(rng, cfg),
+    loss=lambda p, b, cfg, mesh: hymba.loss_fn(p, b, cfg),
+    prefill=lambda p, b, cfg, mesh: hymba.prefill(p, b, cfg),
+    decode=lambda p, c, b, cfg, mesh, afn: hymba.decode_step(p, c, b, cfg, attn_fn=afn),
+    batch_specs=_DENSE.batch_specs,
+    cache_specs=lambda cfg, shape: hymba.cache_specs(cfg, shape.global_batch, shape.seq_len),
+    init_cache=lambda cfg, batch, cap: hymba.init_cache(cfg, batch, cap),
+)
+
+# -- vlm --------------------------------------------------------------------
+
+
+def _vlm_batch_specs(cfg, shape):
+    specs = _tok_specs(cfg, shape, decode=shape.kind == "decode")
+    if shape.kind != "decode":
+        f = cfg.frontend
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, f.num_positions, f.embed_dim), jnp.bfloat16
+        )
+    return specs
+
+
+_VLM = _Family(
+    init=_DENSE.init,
+    loss=_DENSE.loss,
+    prefill=_DENSE.prefill,
+    decode=_DENSE.decode,
+    batch_specs=_vlm_batch_specs,
+    cache_specs=_DENSE.cache_specs,
+    init_cache=_DENSE.init_cache,
+)
+
+# -- audio (enc-dec) -----------------------------------------------------------
+
+
+def _audio_batch_specs(cfg, shape):
+    e = cfg.encdec
+    B, S = shape.global_batch, shape.seq_len
+    src = max(1, S // e.src_ratio)
+    specs = _tok_specs(cfg, shape, decode=shape.kind == "decode")
+    if shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((B, src, cfg.frontend.embed_dim), jnp.bfloat16)
+    return specs
+
+
+_AUDIO = _Family(
+    init=lambda rng, cfg: encdec.init_params(rng, cfg),
+    loss=lambda p, b, cfg, mesh: encdec.loss_fn(p, b, cfg),
+    prefill=lambda p, b, cfg, mesh: encdec.prefill(p, b, cfg),
+    decode=lambda p, c, b, cfg, mesh, afn: encdec.decode_step(p, c, b, cfg, attn_fn=afn),
+    batch_specs=_audio_batch_specs,
+    cache_specs=lambda cfg, shape: encdec.cache_specs(
+        cfg, shape.global_batch, shape.seq_len,
+        max(1, shape.seq_len // cfg.encdec.src_ratio),
+    ),
+    init_cache=lambda cfg, batch, cap: encdec.init_cache(
+        cfg, batch, cap, max(1, cap // cfg.encdec.src_ratio)
+    ),
+)
+
+_FAMILIES = {
+    "dense": _DENSE,
+    "moe": _MOE,
+    "ssm": _SSM,
+    "hybrid": _HYBRID,
+    "vlm": _VLM,
+    "audio": _AUDIO,
+}
+
+
+def _family(cfg: ModelConfig) -> _Family:
+    return _FAMILIES[cfg.family]
+
+
+def build(cfg: ModelConfig, mesh=None, decode_attn_fn=None) -> Model:
+    cfg.validate()
+    return Model(cfg=cfg, mesh=mesh, decode_attn_fn=decode_attn_fn)

@@ -1,0 +1,158 @@
+"""Parameter/batch/cache PartitionSpec rules for the production mesh.
+
+Layout (see DESIGN.md §4):
+  TP   over 'model'  — d_ff / head / vocab / expert dims
+  FSDP over 'data'   — the non-TP matrix dim (ZeRO-3), required for 100B+ archs
+  DP   over 'pod'    — params replicated; gradient sync is the pod-transport
+                       chunnel Select (xla | ring | hierarchical | compressed)
+
+Rules are name-based on the owning parameter, padded with None for any leading
+stacking dims, so they apply to scanned (L, ...) stacks, xlstm per-layer dicts,
+and MoE (L, E, ...) expert banks alike.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingConfig
+
+# param name -> spec for the trailing dims
+_COL = ("wq", "wk", "wv", "wz", "wi", "wf", "wo_gate", "src_proj")  # (d_in, out*) -> out over model
+_ROW = ("wo", "down", "out_proj")  # (in*, d_out) -> in over model
+_GLU_UP = ("gate", "up")
+
+
+def _pad(spec: tuple, ndim: int, shape: tuple[int, ...] = (), axis_sizes: dict | None = None) -> P:
+    full = (None,) * (ndim - len(spec)) + tuple(spec)
+    if axis_sizes and shape:
+        # pjit rejects in_shardings whose dim isn't divisible by the axis size
+        # (e.g. hymba vocab 32001, xlstm per-head biases) or that name an axis
+        # absent from the mesh: drop those axes.
+        fixed = []
+        for dim, ax in zip(shape, full):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            if any(a not in axis_sizes for a in axes):
+                fixed.append(None)
+                continue
+            n = 1
+            for a in axes:
+                n *= axis_sizes[a]
+            fixed.append(ax if (n > 0 and dim % n == 0) else None)
+        full = tuple(fixed)
+    return P(*full)
+
+
+def param_spec(path: tuple[str, ...], shape: tuple[int, ...], sh: ShardingConfig,
+               axis_sizes: dict | None = None) -> P:
+    def _pad(spec: tuple, ndim: int, _shape=shape, _ax=axis_sizes):  # shadow w/ context
+        return globals()["_pad"](spec, ndim, _shape, _ax)
+
+    fsdp = "data" if sh.fsdp else None
+    names = [str(k) for k in path]
+    ndim = len(shape)
+    owner = None
+    for n in reversed(names):
+        if not n.isdigit() and n not in ("w", "b", "scale", "bias", "table"):
+            owner = n
+            break
+    leaf = names[-1]
+    in_moe = "moe" in names
+
+    if leaf == "table" or owner == "embed":
+        return _pad(("model", fsdp), ndim)
+    if owner == "lm_head":
+        return _pad((fsdp, "model"), ndim) if leaf == "w" else _pad(("model",), ndim)
+    if owner == "router":
+        return _pad((fsdp, None), ndim) if leaf == "w" else _pad((None,), ndim)
+    if in_moe and owner in _GLU_UP:  # (E, D, F)
+        return _pad(("model", fsdp, None), ndim)
+    if in_moe and owner == "down":  # (E, F, D)
+        return _pad(("model", None, fsdp), ndim)
+    if leaf in ("scale", "bias") or owner in ("r",) or leaf in ("dt_bias", "D", "conv_b"):
+        return _pad((), ndim)
+    if leaf == "A_log" or owner == "A_log":
+        return _pad(("model", None), ndim)
+    if leaf == "conv_w" or owner == "conv_w":
+        return _pad((None, "model"), ndim)
+    if owner in _COL or owner in _GLU_UP or owner in ("in_proj", "x_proj"):
+        if leaf == "b":
+            return _pad(("model",), ndim)
+        return _pad((fsdp, "model"), ndim)
+    if owner == "dt_proj":  # (dt_rank, d_in)
+        return _pad((None, "model"), ndim) if leaf == "w" else _pad(("model",), ndim)
+    if owner in _ROW:
+        if leaf == "b":
+            return _pad((), ndim)
+        return _pad(("model", fsdp), ndim)
+    return _pad((), ndim)  # replicate by default (small leaves)
+
+
+def param_specs(params_shape: Any, sh: ShardingConfig, mesh=None):
+    """Map a param pytree (arrays or ShapeDtypeStructs) to PartitionSpecs."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    treedef = jax.tree.structure(params_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(
+            getattr(k, "key", getattr(k, "idx", getattr(k, "name", str(k)))) for k in path
+        )
+        keys = tuple(str(k) for k in keys)
+        specs.append(param_spec(keys, leaf.shape, sh, axis_sizes))
+    return jax.tree.unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh) -> tuple:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes
+
+
+def data_spec(shape: tuple[int, ...], mesh, *, batch_dim: int = 0) -> P:
+    """Shard the batch dim over pod+data when divisible, else replicate."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    spec = [None] * len(shape)
+    if shape[batch_dim] % n == 0 and shape[batch_dim] > 0:
+        spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def kv_partition_mode(cfg: ModelConfig, mesh, sh: ShardingConfig) -> str:
+    """'heads' when kv heads divide the model axis, else 'sequence'."""
+    if sh.kv_partition != "auto":
+        return sh.kv_partition
+    m = mesh.shape.get("model", 1)
+    return "heads" if cfg.num_kv_heads % m == 0 else "sequence"
+
+
+def cache_spec_for(shape: tuple[int, ...], cfg: ModelConfig, mesh, sh: ShardingConfig) -> P:
+    """Spec for a KV-cache leaf shaped (..., B, S, KH, hd)."""
+    mode = kv_partition_mode(cfg, mesh, sh)
+    axes = batch_axes(mesh)
+    b_ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+    ndim = len(shape)
+    # trailing dims: (B, S, KH, hd)
+    n_batch = 1
+    for a in axes:
+        n_batch *= mesh.shape[a]
+    b_spec = b_ax if (shape[ndim - 4] % max(n_batch, 1) == 0) else None
+    if mode == "heads":
+        spec = (b_spec, None, "model", None)
+    else:
+        m = mesh.shape.get("model", 1)
+        s_ok = shape[ndim - 3] % max(m, 1) == 0
+        spec = (b_spec, "model" if s_ok else None, None, None)
+    return P(*((None,) * (ndim - 4) + spec))

@@ -1,0 +1,144 @@
+"""Selective state-space (mamba-style) core, used by hymba's SSM branch.
+
+Diagonal SSM: h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t + D x_t
+Parallelized with jax.lax.associative_scan inside sequence chunks (bounded
+memory) and a lax.scan carry across chunks. The Pallas TPU kernel for this
+hot-spot lives in kernels/ssm_scan with this module as its oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers as L
+from repro.models import pshard
+
+
+def ssm_init(rng, d_model: int, s: SSMConfig):
+    d_in = s.expand * d_model
+    dt_rank = s.dt_rank or max(1, -(-d_model // 16))
+    r = jax.random.split(rng, 7)
+    return {
+        "in_proj": L.linear_init(r[0], d_model, 2 * d_in),  # x and gate z
+        "conv_w": L.truncated_normal_init(r[1], (s.conv_dim, d_in), 0.2),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": L.linear_init(r[2], d_in, dt_rank + 2 * s.state_dim),  # dt, B, C
+        "dt_proj": L.linear_init(r[3], dt_rank, d_in),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(r[4], (d_in,), minval=1e-3, maxval=1e-1)) - 1.0
+        ),
+        # S4D-real initialization of A (negative reals)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32),
+                                          (d_in, s.state_dim))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": L.linear_init(r[5], d_in, d_model),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray  # (B, d_in, N) carried SSM state
+    conv: jnp.ndarray  # (B, conv_dim - 1, d_in) causal-conv tail
+
+
+def init_state(batch: int, d_model: int, s: SSMConfig, dtype=jnp.float32) -> SSMState:
+    d_in = s.expand * d_model
+    return SSMState(
+        h=jnp.zeros((batch, d_in, s.state_dim), dtype),
+        conv=jnp.zeros((batch, s.conv_dim - 1, d_in), dtype),
+    )
+
+
+def _causal_conv(x, w, b, tail):
+    """x: (B,S,C), w: (K,C) depthwise, tail: (B,K-1,C) from the previous segment."""
+    K = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_tail = xp[:, -(K - 1) :] if K > 1 else jnp.zeros_like(tail)
+    return out + b.astype(x.dtype), new_tail
+
+
+def _scan_chunk(a, bx, h0):
+    """Associative scan of h_t = a_t * h_{t-1} + bx_t within a chunk.
+
+    a, bx: (C, B, d_in, N); h0: (B, d_in, N). Returns (h_all (C,...), h_last).
+    """
+    a0 = jnp.concatenate([jnp.ones_like(a[:1]), a[1:]], axis=0)  # fold h0 into bx[0]
+    bx0 = bx.at[0].add(a[0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a0, bx0), axis=0)
+    return b_c, b_c[-1]
+
+
+def ssm_apply(
+    p,
+    x: jnp.ndarray,  # (B, S, D)
+    s: SSMConfig,
+    state: Optional[SSMState] = None,
+    *,
+    chunk: int = 256,
+    impl: str = "jnp",
+):
+    """Returns (y (B,S,D), new_state). Sub-quadratic in S; O(B*chunk*d_in*N) live."""
+    B, S, D = x.shape
+    d_in = s.expand * D
+    dt_rank = s.dt_rank or max(1, -(-D // 16))
+    state = state if state is not None else init_state(B, D, s)
+
+    xz = L.linear(p["in_proj"], x)  # (B,S,2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # TP layout for the SSM branch: the time recurrence cannot shard S, but
+    # the state channels are independent — pin d_in over 'model'.
+    xs = pshard.shard_model_dim(xs, 2)
+    z = pshard.shard_model_dim(z, 2)
+    xs, conv_tail = _causal_conv(xs, p["conv_w"], p["conv_b"], state.conv)
+    xs = jax.nn.silu(xs)
+
+    proj = L.linear(p["x_proj"], xs)  # (B,S,dt_rank+2N)
+    dt_in, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(
+        L.linear(p["dt_proj"], dt_in).astype(jnp.float32) + p["dt_bias"]
+    )  # (B,S,d_in)
+    A = -jnp.exp(p["A_log"])  # (d_in, N)
+    a = jnp.exp(dt[..., None] * A)  # (B,S,d_in,N)
+    bx = (dt * xs.astype(jnp.float32))[..., None] * Bmat.astype(jnp.float32)[..., None, :]
+    a = pshard.shard_model_dim(a, 2)
+    bx = pshard.shard_model_dim(bx, 2)
+
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    n = a.shape[1] // chunk
+    a_ch = a.reshape(B, n, chunk, d_in, s.state_dim).transpose(1, 2, 0, 3, 4)
+    bx_ch = bx.reshape(B, n, chunk, d_in, s.state_dim).transpose(1, 2, 0, 3, 4)
+    C_ch = Cmat.astype(jnp.float32).reshape(B, n, chunk, s.state_dim).transpose(1, 2, 0, 3)
+
+    def body(h, inputs):
+        # contract with C INSIDE the chunk so the full (B,S,d_in,N) state
+        # sequence never materializes (only (chunk,B,d_in,N) transients)
+        a_c, bx_c, C_c = inputs
+        h_all, h_last = _scan_chunk(a_c, bx_c, h)
+        y_c = jnp.einsum("cbdn,cbn->cbd", h_all, C_c)
+        return h_last, y_c
+
+    h_final, y_seq = jax.lax.scan(body, state.h.astype(jnp.float32),
+                                  (a_ch, bx_ch, C_ch))
+    y = y_seq.transpose(2, 0, 1, 3).reshape(B, n * chunk, d_in)[:, :S]
+    y = y + p["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = L.linear(p["out_proj"], y)
+    return y, SSMState(h=h_final, conv=conv_tail)
+
+
+def ssm_decode(p, x, s: SSMConfig, state: SSMState):
+    """Single-token recurrence. x: (B, 1, D)."""
+    return ssm_apply(p, x, s, state, chunk=1)

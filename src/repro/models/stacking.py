@@ -1,0 +1,152 @@
+"""Layer stacking: scanned (compile-time compact) or unrolled (roofline probes).
+
+A model is a sequence of *segments*; each segment is a run of identically-shaped
+layers scanned together with static per-segment kwargs (e.g. hymba's sliding
+window vs global-attention layers). Param pytrees are stacked along a leading
+layer axis per segment.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Segment(NamedTuple):
+    start: int
+    length: int
+    static: dict  # static kwargs for the layer body
+
+
+def make_segments(num_layers: int, special: Sequence[int], special_kw: dict, default_kw: dict):
+    """Split [0, L) into runs of default layers with special layers unrolled."""
+    segs: list[Segment] = []
+    prev = 0
+    for s in sorted(special):
+        if s > prev:
+            segs.append(Segment(prev, s - prev, dict(default_kw)))
+        segs.append(Segment(s, 1, dict(special_kw)))
+        prev = s + 1
+    if prev < num_layers:
+        segs.append(Segment(prev, num_layers - prev, dict(default_kw)))
+    return segs
+
+
+def slice_layers(stacked, start: int, length: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0), stacked)
+
+
+def _remat(fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full"
+
+
+def apply_stack(
+    stacked_params,
+    x,
+    body: Callable,  # body(layer_params, x, **static) -> x
+    *,
+    segments: Sequence[Segment] | None = None,
+    num_layers: int,
+    scan: bool = True,
+    remat: str = "full",
+    remat_group: int = 1,
+    static: dict | None = None,
+):
+    """Run ``x`` through the layer stack.
+
+    ``scan=True`` uses lax.scan per segment (small HLO, fast 512-device compile);
+    ``scan=False`` unrolls — used by the roofline flop probes so per-layer cost
+    is visible to XLA cost analysis (scan bodies are counted once).
+
+    ``remat_group=g`` checkpoints every g layers instead of every layer: the
+    remat-saved residual stack shrinks g-fold (L/g boundary activations) at no
+    extra recompute (each layer is still recomputed exactly once in backward).
+    Standard deep-stack memory lever (used for the 88/94-layer archs).
+    """
+    segments = segments or [Segment(0, num_layers, dict(static or {}))]
+    for seg in segments:
+        seg_params = slice_layers(stacked_params, seg.start, seg.length)
+        g = remat_group if (scan and remat_group > 1 and seg.length % remat_group == 0
+                            and seg.length > remat_group) else 1
+
+        def one(p, h, kw=tuple(sorted(seg.static.items()))):
+            return body(p, h, **dict(kw))
+
+        if g > 1:
+            def grouped(p_g, h):
+                for i in range(g):
+                    h = one(jax.tree.map(lambda a: a[i], p_g), h)
+                return h
+            fn = _remat(grouped, remat)
+            seg_params = jax.tree.map(
+                lambda a: a.reshape((seg.length // g, g) + a.shape[1:]), seg_params)
+        else:
+            fn = _remat(one, remat)
+
+        if scan and seg.length // g > 1:
+
+            def scan_body(h, p, fn=fn):
+                return fn(p, h), None
+
+            x, _ = jax.lax.scan(scan_body, x, seg_params)
+        else:
+            for i in range(seg.length // g):
+                p_i = jax.tree.map(lambda a: a[i], seg_params)
+                x = fn(p_i, x)
+    return x
+
+
+def apply_stack_with_cache(
+    stacked_params,
+    x,
+    caches,  # pytree with leading layer axis per leaf
+    body: Callable,  # body(layer_params, x, cache, **static) -> (x, new_cache)
+    *,
+    segments: Sequence[Segment] | None = None,
+    num_layers: int,
+    scan: bool = True,
+    remat: str = "none",
+    static: dict | None = None,
+):
+    """Like apply_stack but threads per-layer cache state (KV caches, SSM state)."""
+    segments = segments or [Segment(0, num_layers, dict(static or {}))]
+    new_cache_segs = []
+    for seg in segments:
+        seg_params = slice_layers(stacked_params, seg.start, seg.length)
+        seg_cache = slice_layers(caches, seg.start, seg.length)
+        fn = _remat(
+            lambda p, h, c, kw=tuple(sorted(seg.static.items())): body(p, h, c, **dict(kw)),
+            remat,
+        )
+        if scan and seg.length > 1:
+
+            def scan_body(h, pc, fn=fn):
+                p, c = pc
+                h, c_new = fn(p, h, c)
+                return h, c_new
+
+            x, seg_cache_new = jax.lax.scan(scan_body, x, (seg_params, seg_cache))
+        else:
+            outs = []
+            for i in range(seg.length):
+                p_i = jax.tree.map(lambda a: a[i], seg_params)
+                c_i = jax.tree.map(lambda a: a[i], seg_cache)
+                x, c_new = fn(p_i, x, c_i)
+                outs.append(c_new)
+            seg_cache_new = jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *outs)
+        new_cache_segs.append(seg_cache_new)
+    new_caches = jax.tree.map(lambda *segs: jnp.concatenate(segs, axis=0), *new_cache_segs)
+    return x, new_caches
+
+
+def stacked_init(layer_init: Callable, rng, num_layers: int, *args: Any):
+    """vmap a per-layer initializer over split rngs -> stacked params."""
+    rngs = jax.random.split(rng, num_layers)
+    return jax.vmap(lambda r: layer_init(r, *args))(rngs)

@@ -1,0 +1,228 @@
+"""Dense GQA transformer LM (llama/qwen/mistral/granite families).
+
+Exposes the family-independent Model API used by train/serve/launch:
+  init(rng) -> params
+  loss(params, batch) -> scalar
+  prefill(params, batch) -> (cache, logits_last)
+  decode(params, cache, batch) -> (cache, logits)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import pshard
+from repro.models.stacking import Segment, apply_stack, apply_stack_with_cache, stacked_init
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_block_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 5)
+    hd = cfg.head_dim_
+    return {
+        "wq": L.linear_init(r[0], cfg.d_model, cfg.num_heads * hd, bias=cfg.qkv_bias),
+        "wk": L.linear_init(r[1], cfg.d_model, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": L.linear_init(r[2], cfg.d_model, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": L.linear_init(r[3], cfg.num_heads * hd, cfg.d_model),
+    }
+
+
+def dense_layer_init(rng, cfg: ModelConfig):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": attn_block_init(r1, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(r2, cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated),
+    }
+
+
+def init_params(rng, cfg: ModelConfig, layer_init=dense_layer_init):
+    r_emb, r_layers, r_head = jax.random.split(rng, 3)
+    p = {
+        "embed": L.embedding_init(r_emb, cfg.vocab_padded, cfg.d_model),
+        "layers": stacked_init(layer_init, r_layers, cfg.num_layers, cfg),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.linear_init(r_head, cfg.d_model, cfg.vocab_padded)
+    return p
+
+
+def head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = L.linear(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = L.linear(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = L.linear(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return pshard.shard_heads(q), pshard.shard_heads(k), pshard.shard_heads(v)
+
+
+def attn_block(p, x, cfg: ModelConfig, positions, *, window=None, impl=None):
+    q, k, v = qkv(p, x, cfg, positions)
+    o = attn.attention(
+        q, k, v, impl=impl or cfg.attn_impl, causal=True, window=window, chunk=cfg.attn_chunk
+    )
+    B, S = x.shape[:2]
+    return L.linear(p["wo"], o.reshape(B, S, -1))
+
+
+def dense_layer(p, x, cfg: ModelConfig, positions, *, window=None):
+    h = x + attn_block(p["attn"], L.apply_norm(p["ln1"], x, eps=cfg.norm_eps), cfg, positions,
+                       window=window)
+    h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act)
+    return h
+
+
+def hidden_states(params, tokens, cfg: ModelConfig, *, extra_embeds=None):
+    """tokens: (B, S) -> final hidden states (B, S, D).
+
+    ``extra_embeds``: optional (B, P, D) frontend embeddings (VLM patches) that
+    replace the first P token positions.
+    """
+    x = L.embed(params["embed"], tokens)
+    if extra_embeds is not None:
+        P = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    positions = jnp.arange(tokens.shape[1])
+    x = pshard.shard_activations(x)
+
+    def body(p, h, **kw):
+        return pshard.shard_activations(dense_layer(p, h, cfg, positions, **kw))
+
+    x = apply_stack(
+        params["layers"], x, body,
+        num_layers=cfg.num_layers, scan=cfg.scan_layers, remat=cfg.remat, remat_group=cfg.remat_group,
+        static={"window": cfg.sliding_window},
+    )
+    return L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, loss_chunk: Optional[int] = None):
+    h = hidden_states(params, batch["tokens"], cfg, extra_embeds=batch.get("patches"))
+    chunk = loss_chunk if loss_chunk is not None else cfg.loss_chunk
+    return L.chunked_lm_loss(h, head_weight(params, cfg), batch["labels"], chunk=chunk,
+                             real_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim_
+    shape = (cfg.num_layers, batch, capacity, cfg.num_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim_
+    shape = (cfg.num_layers, batch, capacity, cfg.num_kv_heads, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Process the full prompt; return (cache, last-position logits)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if batch.get("patches") is not None:
+        P = batch["patches"].shape[1]
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x[:, P:]], axis=1)
+    positions = jnp.arange(S)
+
+    def body(p, h, cache_l, **kw):
+        q, k, v = qkv(p["attn"], L.apply_norm(p["ln1"], h, eps=cfg.norm_eps), cfg, positions)
+        o = attn.attention(
+            q, k, v, impl=cfg.attn_impl, causal=True, chunk=cfg.attn_chunk, **kw
+        )
+        h = h + L.linear(p["attn"]["wo"], o.reshape(B, S, -1))
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act)
+        return pshard.shard_activations(h), {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+    empty = {
+        "k": jnp.zeros((cfg.num_layers, 0), jnp.bfloat16),  # placeholder, replaced by ys
+        "v": jnp.zeros((cfg.num_layers, 0), jnp.bfloat16),
+    }
+    x, kv_cache = apply_stack_with_cache(
+        params["layers"], x, empty, body,
+        num_layers=cfg.num_layers, scan=cfg.scan_layers, remat="none",
+        static={"window": cfg.sliding_window},
+    )
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ head_weight(params, cfg).astype(x.dtype), cfg.vocab_size)
+    cache = {"k": kv_cache["k"], "v": kv_cache["v"], "len": jnp.asarray(S, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, *, attn_fn=None):
+    """One-token decode against the KV cache. batch["tokens"]: (B, 1).
+
+    ``attn_fn(q, k_cache, v_cache, kv_len, window)`` is the decode-attention
+    chunnel slot: local dense (default) or the sequence-sharded flash-decode
+    from repro/comm/kvshard.py.
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = cache["len"]
+    x = L.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    attn_fn = attn_fn or (
+        lambda q, kc, vc, n, window: attn.decode_attention_local(q, kc, vc, n, window=window)
+    )
+
+    def body(p, h, cache_l, **kw):
+        q, k, v = qkv(p["attn"], L.apply_norm(p["ln1"], h, eps=cfg.norm_eps), cfg, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k.astype(cache_l["k"].dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v.astype(cache_l["v"].dtype), pos, axis=1
+        )
+        o = attn_fn(q, k_cache, v_cache, pos + 1, kw.get("window"))
+        h = h + L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, eps=cfg.norm_eps), act=cfg.act)
+        return pshard.shard_batch(h), {"k": k_cache, "v": v_cache}
+
+    x, new_kv = apply_stack_with_cache(
+        params["layers"], x, {"k": cache["k"], "v": cache["v"]}, body,
+        num_layers=cfg.num_layers, scan=cfg.scan_layers, remat="none",
+        static={"window": cfg.sliding_window},
+    )
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = L.mask_padded_vocab(
+        x[:, -1] @ head_weight(params, cfg).astype(x.dtype), cfg.vocab_size)
+    new_cache = {"k": new_kv["k"], "v": new_kv["v"], "len": pos + 1}
+    return new_cache, logits

@@ -1,0 +1,270 @@
+"""xLSTM LM (sLSTM + mLSTM blocks, arXiv:2405.04517).
+
+mLSTM: matrix-memory cell, chunkwise-parallel (gated linear attention form):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+sLSTM: scalar-memory cell with a true sequential recurrence (lax.scan over
+time), as the paper notes it is not parallelizable.
+
+Numerics note (DESIGN.md): we use bounded sigmoid input/forget gates instead of
+the paper's exponential gating + stabilizer state; the memory structure (the
+architectural contribution) is unchanged, the stabilizer bookkeeping is not.
+
+No KV cache: serving carries recurrent state, so long_500k decode is O(1)/token.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import pshard
+from repro.models.stacking import stacked_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, cfg: ModelConfig):
+    D = cfg.d_model
+    H, hd = cfg.num_heads, cfg.head_dim_
+    r = jax.random.split(rng, 7)
+    return {
+        "ln": L.norm_init(D, cfg.norm),
+        "wq": L.linear_init(r[0], D, H * hd),
+        "wk": L.linear_init(r[1], D, H * hd),
+        "wv": L.linear_init(r[2], D, H * hd),
+        "wi": L.linear_init(r[3], D, H, bias=True),
+        "wf": L.linear_init(r[4], D, H, bias=True),
+        "wo_gate": L.linear_init(r[5], D, H * hd),
+        "wo": L.linear_init(r[6], H * hd, D),
+    }
+
+
+def mlstm_state(batch: int, cfg: ModelConfig, dtype=jnp.float32):
+    H, hd = cfg.num_heads, cfg.head_dim_
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), dtype),
+        "n": jnp.zeros((batch, H, hd), dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, i, logf, C0, n0):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B,C,H,hd); i: (B,C,H) input gate in [0,1]; logf: (B,C,H) <= 0.
+    C0: (B,H,hd,hd); n0: (B,H,hd). Returns (h (B,C,H,hd), C1, n1).
+    """
+    Bn, Cn, H, hd = q.shape
+    scale = hd**-0.5
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    F = jnp.cumsum(logf, axis=1)  # (B,C,H) cumulative log-forget within chunk
+    # Intra-chunk: D[j,u] = exp(F_j - F_u) * i_u  for u <= j
+    Dmat = jnp.exp(F[:, :, None, :] - F[:, None, :, :])  # (B,j,u,H)
+    causal = jnp.tril(jnp.ones((Cn, Cn), bool))
+    Dmat = jnp.where(causal[None, :, :, None], Dmat * i[:, None, :, :], 0.0)
+    s = jnp.einsum("bjhd,buhd->bjuh", q, k)
+    sv = s * Dmat
+    h_intra = jnp.einsum("bjuh,buhd->bjhd", sv, v)
+    # Inter-chunk: contribution of carry C0, n0 decayed to each position
+    decay = jnp.exp(F)  # (B,C,H)
+    h_inter = jnp.einsum("bjh,bhde,bjhd->bjhe", decay, C0, q)
+    n_inter = jnp.einsum("bjh,bhd,bjhd->bjh", decay, n0, q)
+    # normalizer: n_j . q_j = sum_u D[j,u] (k_u . q_j)
+    nq_intra = jnp.sum(sv, axis=2)
+    denom = jnp.maximum(jnp.abs(nq_intra + n_inter), 1.0)
+    h = (h_intra + h_inter) / denom[..., None]
+    # carry updates
+    last_decay = jnp.exp(F[:, -1])  # (B,H)
+    w_u = jnp.exp(F[:, -1:, :] - F) * i  # (B,C,H): decay from u to end
+    C1 = last_decay[:, :, None, None] * C0 + jnp.einsum("buh,buhd,buhe->bhde", w_u, k, v)
+    n1 = last_decay[:, :, None] * n0 + jnp.einsum("buh,buhd->bhd", w_u, k)
+    return h, C1, n1
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, state=None, *, chunk: Optional[int] = None):
+    """x: (B,S,D) -> (y, new_state). Chunkwise parallel, O(S*chunk) scores."""
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim_
+    chunk = chunk or (cfg.xlstm.chunk_size if cfg.xlstm else 64)
+    chunk = min(chunk, S)
+    state = state if state is not None else mlstm_state(B, cfg)
+
+    xn = L.apply_norm(p["ln"], x, eps=cfg.norm_eps)
+    q = L.linear(p["wq"], xn).reshape(B, S, H, hd)
+    k = L.linear(p["wk"], xn).reshape(B, S, H, hd)
+    v = L.linear(p["wv"], xn).reshape(B, S, H, hd)
+    i = jax.nn.sigmoid(L.linear(p["wi"], xn, dtype=jnp.float32))
+    logf = jax.nn.log_sigmoid(L.linear(p["wf"], xn, dtype=jnp.float32))
+
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, i = zpad(q), zpad(k), zpad(v), zpad(i)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))  # logf=0 => f=1 keeps carry
+    n = q.shape[1] // chunk
+    resh = lambda a: a.reshape((B, n, chunk) + a.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    qs, ks, vs, is_, fs = map(resh, (q, k, v, i, logf))
+
+    def body(carry, xs):
+        C0, n0 = carry
+        qc, kc, vc, ic, fc = xs
+        h, C1, n1 = _mlstm_chunk(qc, kc, vc, ic, fc, C0, n0)
+        return (C1, n1), h
+
+    (C1, n1), hs = jax.lax.scan(body, (state["C"], state["n"]), (qs, ks, vs, is_, fs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, hd)[:, :S]
+    o = jax.nn.sigmoid(L.linear(p["wo_gate"], xn, dtype=jnp.float32)).reshape(B, S, H, hd)
+    y = (h * o).astype(x.dtype).reshape(B, S, H * hd)
+    return x + L.linear(p["wo"], y), {"C": C1, "n": n1}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg: ModelConfig):
+    D = cfg.d_model
+    r = jax.random.split(rng, 8)
+    f_up = int(D * 4 / 3)
+    return {
+        "ln": L.norm_init(D, cfg.norm),
+        "wz": L.linear_init(r[0], D, D, bias=True),
+        "wi": L.linear_init(r[1], D, D, bias=True),
+        "wf": L.linear_init(r[2], D, D, bias=True),
+        "wo_gate": L.linear_init(r[3], D, D, bias=True),
+        "r": L.truncated_normal_init(r[4], (4, D), 0.02),  # diagonal recurrence / gate
+        "ln2": L.norm_init(D, cfg.norm),
+        "ffn": {
+            "gate": L.linear_init(r[5], D, f_up),
+            "up": L.linear_init(r[6], D, f_up),
+            "down": L.linear_init(r[7], f_up, D),
+        },
+    }
+
+
+def slstm_state(batch: int, cfg: ModelConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), dtype)
+    return {"c": z, "n": z + 1e-6, "h": z}
+
+
+def slstm_apply(p, x, cfg: ModelConfig, state=None):
+    """Sequential recurrence over time (the paper: sLSTM is not parallelizable)."""
+    B, S, D = x.shape
+    state = state if state is not None else slstm_state(B, cfg)
+    xn = L.apply_norm(p["ln"], x, eps=cfg.norm_eps)
+    # Precompute input contributions for all timesteps
+    zx = L.linear(p["wz"], xn, dtype=jnp.float32)
+    ix = L.linear(p["wi"], xn, dtype=jnp.float32)
+    fx = L.linear(p["wf"], xn, dtype=jnp.float32)
+    ox = L.linear(p["wo_gate"], xn, dtype=jnp.float32)
+    rz, ri, rf, ro = p["r"][0], p["r"][1], p["r"][2], p["r"][3]
+
+    def step(carry, xs):
+        c, n, h = carry
+        zt, it, ft, ot = xs
+        z = jnp.tanh(zt + rz * h)
+        i = jax.nn.sigmoid(it + ri * h)
+        f = jax.nn.sigmoid(ft + rf * h)
+        o = jax.nn.sigmoid(ot + ro * h)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h), h
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (zx, ix, fx, ox))
+    (c, n, h), hs = jax.lax.scan(step, (state["c"], state["n"], state["h"]), xs)
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    x = x + y
+    x = x + L.mlp(p["ffn"], L.apply_norm(p["ln2"], x, eps=cfg.norm_eps), act=cfg.act)
+    return x, {"c": c, "n": n, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Model (alternating blocks; uniform param structure via union pytree)
+# ---------------------------------------------------------------------------
+
+
+def is_slstm(i: int, cfg: ModelConfig) -> bool:
+    every = cfg.xlstm.slstm_every if cfg.xlstm else 2
+    return (i % every) == every - 1
+
+
+def init_params(rng, cfg: ModelConfig):
+    # Layer kinds are static (derived from cfg via is_slstm), so the param tree
+    # holds arrays only — it stays a valid jit input.
+    r_emb, r_l, r_head = jax.random.split(rng, 3)
+    rngs = jax.random.split(r_l, cfg.num_layers)
+    layers = [
+        slstm_init(rngs[i], cfg) if is_slstm(i, cfg) else mlstm_init(rngs[i], cfg)
+        for i in range(cfg.num_layers)
+    ]
+    return {
+        "embed": L.embedding_init(r_emb, cfg.vocab_padded, cfg.d_model),
+        "layers": layers,  # heterogeneous: kept as a list (segments, not scanned)
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "lm_head": L.linear_init(r_head, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    states = []
+    for idx in range(cfg.num_layers):
+        if is_slstm(idx, cfg):
+            states.append(slstm_state(batch, cfg))
+        else:
+            states.append(mlstm_state(batch, cfg))
+    return {"layers": states, "len": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, batch: int):
+    return jax.eval_shape(lambda: init_state(cfg, batch))
+
+
+def forward(params, tokens, cfg: ModelConfig, state=None, *, collect_state: bool = False):
+    x = L.embed(params["embed"], tokens)
+    new_states = []
+    for idx, lp in enumerate(params["layers"]):
+        st = state["layers"][idx] if state is not None else None
+        if is_slstm(idx, cfg):
+            x, s_new = slstm_apply(lp, x, cfg, st)
+        else:
+            x, s_new = mlstm_apply(lp, x, cfg, st)
+        x = pshard.shard_batch(x)
+        new_states.append(s_new)
+    x = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    if collect_state:
+        return x, new_states
+    return x
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, loss_chunk=None):
+    h = forward(params, batch["tokens"], cfg)
+    chunk = loss_chunk if loss_chunk is not None else cfg.loss_chunk
+    return L.chunked_lm_loss(h, params["lm_head"]["w"], batch["labels"], chunk=chunk,
+                             real_vocab=cfg.vocab_size)
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    h, states = forward(params, tokens, cfg, state=None, collect_state=True)
+    logits = L.mask_padded_vocab(
+        h[:, -1] @ params["lm_head"]["w"].astype(h.dtype), cfg.vocab_size)
+    return {"layers": states, "len": jnp.asarray(tokens.shape[1], jnp.int32)}, logits
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    h, states = forward(params, batch["tokens"], cfg, state=cache, collect_state=True)
+    logits = L.mask_padded_vocab(
+        h[:, -1] @ params["lm_head"]["w"].astype(h.dtype), cfg.vocab_size)
+    return {"layers": states, "len": cache["len"] + 1}, logits

@@ -1,0 +1,4 @@
+from repro.optim import adamw
+from repro.optim.adamw import AdamWState, clip_by_global_norm, global_norm, lr_schedule
+
+__all__ = ["adamw", "AdamWState", "clip_by_global_norm", "global_norm", "lr_schedule"]

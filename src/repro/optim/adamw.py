@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay + global-norm clipping (from scratch)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray
+
+
+def init(params, dtype=jnp.bfloat16) -> AdamWState:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+    return AdamWState(m=zeros(), v=zeros(), count=jnp.zeros((), jnp.int32))
+
+
+def init_shape(params_shape, dtype=jnp.bfloat16) -> AdamWState:
+    zeros = lambda: jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), params_shape)
+    return AdamWState(m=zeros(), v=zeros(), count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def update(grads, state: AdamWState, params, lr, cfg: TrainConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    mdt = state.m and jax.tree.leaves(state.m)[0].dtype or jnp.float32
+    m = jax.tree.map(
+        lambda mm, g: (b1 * mm.astype(jnp.float32) + (1 - b1) * g).astype(mdt),
+        state.m, grads)
+    v = jax.tree.map(
+        lambda vv, g: (b2 * vv.astype(jnp.float32) + (1 - b2) * g * g).astype(mdt),
+        state.v, grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, mm, vv):
+        mm, vv = mm.astype(jnp.float32), vv.astype(jnp.float32)
+        step = (mm / c1) / (jnp.sqrt(vv / c2) + cfg.eps)
+        return (p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(m=m, v=v, count=count), {"grad_norm": gnorm}
+
+
+def lr_schedule(cfg: TrainConfig) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+    return lr

@@ -1,0 +1,208 @@
+"""Sharded key-value serving with reconfigurable load balancing (paper §7.3).
+
+Two routing chunnels over the host fabric:
+
+  ClientShardChunnel  the client evaluates hash(key) % n_shards and sends
+                      DIRECTLY to the owning backend (no extra hop). Negotiation
+                      hands the client a nonce so backends accept its requests.
+  ServerRouterChunnel requests go to a router process which forwards to the
+                      right backend (extra hop + router queueing, but backends
+                      can be re-provisioned without touching clients).
+
+The benchmark (benchmarks/bench_sharding.py ~ Fig. 6) measures p50/p95 latency
+vs offered load for both, and the reconfiguration between them mid-run.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core import Fabric, FabricTransport, LinkModel
+from repro.core.capability import CapabilitySet
+from repro.core.chunnel import Chunnel, Datapath, WireType
+
+KV_REQ = WireType.of("kvreq")
+
+
+def shard_of(key: str, n: int) -> int:
+    return int(hashlib.md5(key.encode()).hexdigest(), 16) % n
+
+
+class KVBackend:
+    """One shard server: applies PUT/GET against a local dict."""
+
+    def __init__(self, fabric: Fabric, addr: str, *, service_time_s: float = 0.0):
+        self.addr = addr
+        self.ep = fabric.register(addr)
+        self.data: Dict[str, Any] = {}
+        self.service_time_s = service_time_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            got = self.ep.recv(timeout=0.05)
+            if got is None:
+                continue
+            src, msg = got
+            if not isinstance(msg, dict) or "op" not in msg:
+                continue
+            if self.service_time_s:
+                time.sleep(self.service_time_s)
+            if msg["op"] == "put":
+                self.data[msg["key"]] = msg["val"]
+                out = {"ok": True, "rid": msg["rid"]}
+            else:
+                out = {"ok": True, "val": self.data.get(msg["key"]), "rid": msg["rid"]}
+            self.ep.send(msg["reply_to"], out)
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=1.0)
+        self.ep.close()
+
+
+class Router:
+    """Extra-hop router used by the server-side chunnel."""
+
+    def __init__(self, fabric: Fabric, addr: str, backends: List[str]):
+        self.addr = addr
+        self.ep = fabric.register(addr)
+        self.backends = backends
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            got = self.ep.recv(timeout=0.05)
+            if got is None:
+                continue
+            src, msg = got
+            if isinstance(msg, dict) and "key" in msg:
+                self.ep.send(self.backends[shard_of(msg["key"], len(self.backends))], msg)
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=1.0)
+        self.ep.close()
+
+
+@dataclass
+class ClientShardChunnel(Chunnel):
+    """Client-side sharding: compositional capability (one side suffices)."""
+
+    backends: tuple = ()
+    upper_type = KV_REQ
+    lower_type = KV_REQ
+
+    @property
+    def name(self):
+        return "ClientShard"
+
+    def capabilities(self):
+        return CapabilitySet.compose("route:client-shard")
+
+    def connect_wrap(self, inner):
+        return _RoutedDP(self, inner, lambda m: self.backends[
+            shard_of(m["key"], len(self.backends))])
+
+
+@dataclass
+class ServerRouterChunnel(Chunnel):
+    router_addr: str = "router"
+    upper_type = KV_REQ
+    lower_type = KV_REQ
+
+    @property
+    def name(self):
+        return "ServerRouter"
+
+    def capabilities(self):
+        return CapabilitySet.compose("route:server")
+
+    def connect_wrap(self, inner):
+        return _RoutedDP(self, inner, lambda m: self.router_addr)
+
+
+class _RoutedDP(Datapath):
+    def __init__(self, ch, inner, pick):
+        self.ch = ch
+        self.inner = inner
+        self.pick = pick
+
+    def send(self, msgs):
+        for m in msgs:
+            m = dict(m)
+            m["_route_to"] = self.pick(m)
+            if self.inner is not None:
+                self.inner.send([m])
+
+    def recv(self, buf, timeout=None):
+        return self.inner.recv(buf, timeout) if self.inner else 0
+
+
+class AddressedTransport(Chunnel):
+    """Transport that honours the routing decision in ``_route_to``."""
+
+    upper_type = KV_REQ
+    lower_type = WireType.of("unit")
+
+    def __init__(self, ep):
+        self.ep = ep
+
+    @property
+    def name(self):
+        return "AddressedTransport"
+
+    def connect_wrap(self, inner):
+        ep = self.ep
+
+        class DP(Datapath):
+            def send(self, msgs):
+                for m in msgs:
+                    ep.send(m.pop("_route_to"), m)
+
+            def recv(self, buf, timeout=None):
+                n = 0
+                deadline = None if timeout is None else time.monotonic() + timeout
+                while n < len(buf):
+                    t = None if deadline is None else max(0.0, deadline - time.monotonic())
+                    got = ep.recv(timeout=t)
+                    if got is None:
+                        break
+                    buf[n] = got[1]
+                    n += 1
+                    if timeout is not None:
+                        break
+                return n
+
+        return DP()
+
+
+class KVClient:
+    """Issues requests through a (reconfigurable) routing stack."""
+
+    def __init__(self, fabric: Fabric, addr: str, handle):
+        self.ep = fabric.register(addr) if isinstance(addr, str) else addr
+        self.addr = self.ep.addr
+        self.handle = handle  # ConnHandle over a routing stack
+        self._rid = itertools.count()
+
+    def request(self, op: str, key: str, val=None, timeout: float = 2.0):
+        rid = next(self._rid)
+        t0 = time.perf_counter()
+        self.handle.send([{"op": op, "key": key, "val": val, "rid": rid,
+                           "reply_to": self.addr}])
+        buf = [None]
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            n = self.handle.recv(buf, timeout=0.05)
+            if n and isinstance(buf[0], dict) and buf[0].get("rid") == rid:
+                return buf[0], time.perf_counter() - t0
+        raise TimeoutError(f"kv {op} {key}")

@@ -1,0 +1,77 @@
+"""Serve-step builders: prefill and decode with production shardings."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingConfig
+from repro.models.registry import Model
+from repro.models.sharding import batch_axes, cache_spec_for, data_spec
+
+
+def cache_shardings(cache_specs: Any, cfg: ModelConfig, mesh, sh: ShardingConfig):
+    """Per-leaf NamedShardings for a cache pytree (KV leaves + SSM state)."""
+    axes = batch_axes(mesh)
+    b_ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+    n_batch = 1
+    for a in axes:
+        n_batch *= mesh.shape[a]
+    m = mesh.shape.get("model", 1)
+
+    def spec(path, leaf) -> P:
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        leafname = names[-1] if names else ""
+        shape = leaf.shape
+        if leafname in ("k", "v", "xk", "xv") and len(shape) >= 4:
+            return cache_spec_for(shape, cfg, mesh, sh)
+        bspec = b_ax if (len(shape) > 0 and shape[0] % max(n_batch, 1) == 0
+                         and len(shape) >= 2) else None
+        if leafname == "ssm_h":  # (B, d_in, N)
+            ok = shape[1] % m == 0
+            return P(bspec, "model" if ok else None, None)
+        if leafname == "ssm_conv":  # (B, K-1, d_in)
+            ok = shape[2] % m == 0
+            return P(bspec, None, "model" if ok else None)
+        if leafname == "C" and len(shape) == 4:  # mLSTM (B,H,hd,hd)
+            ok = shape[2] % m == 0
+            return P(bspec, None, "model" if ok else None, None)
+        if leafname == "n" and len(shape) == 3:  # (B,H,hd)
+            ok = shape[2] % m == 0
+            return P(bspec, None, "model" if ok else None)
+        if len(shape) == 2:  # sLSTM c/n/h (B,D)
+            ok = shape[1] % m == 0
+            return P(bspec, "model" if ok else None)
+        return P()
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_specs)[0]
+    treedef = jax.tree.structure(cache_specs)
+    return jax.tree.unflatten(
+        treedef, [NamedSharding(mesh, spec(p, l)) for p, l in flat])
+
+
+def jit_prefill(model: Model, mesh, sh: ShardingConfig, batch_specs: dict):
+    ns = lambda s: NamedSharding(mesh, s)
+    param_sh = jax.tree.map(ns, model.param_specs(sh))
+    batch_sh = {k: ns(data_spec(v.shape, mesh)) for k, v in batch_specs.items()}
+    return jax.jit(
+        lambda p, b: model.prefill(p, b),
+        in_shardings=(param_sh, batch_sh),
+    )
+
+
+def jit_decode(model: Model, mesh, sh: ShardingConfig, batch_specs: dict,
+               cache_specs: Any, donate_cache: bool = True):
+    ns = lambda s: NamedSharding(mesh, s)
+    param_sh = jax.tree.map(ns, model.param_specs(sh))
+    batch_sh = {k: ns(data_spec(v.shape, mesh)) for k, v in batch_specs.items()}
+    cache_sh = cache_shardings(cache_specs, model.cfg, mesh, sh)
+    return jax.jit(
+        lambda p, c, b: model.decode(p, c, b),
+        in_shardings=(param_sh, cache_sh, batch_sh),
+        out_shardings=(cache_sh, None),
+        donate_argnums=(1,) if donate_cache else (),
+    )

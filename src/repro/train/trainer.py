@@ -1,0 +1,231 @@
+"""Reconfigurable trainer: the Bertha runtime driving the JAX step.
+
+One HostAgent per participating host negotiates the step stack (gradient
+transport + MoE dispatch + KV partitioning chunnels) through the rendezvous
+store before compiling — guaranteeing every host lowers the identical SPMD
+program. The trainer then runs the jitted step, and can RECONFIGURE between
+steps without losing state:
+
+  * params/optimizer state carry over (they live outside the chunnels),
+  * chunnel state is migrated (e.g. error-feedback residuals are re-zeroed
+    when the wire format changes — the paper's state-translation step),
+  * the switch point is the step boundary (data plane is single-threaded per
+    host here; the lock/barrier mechanisms are exercised by the §8.3 bench).
+
+Fault tolerance:
+  * periodic + async checkpoints (atomic, resharding restore),
+  * heartbeat monitor: hosts report step times; persistent stragglers trigger
+    a negotiated transition to a DCN-lighter transport (compressed / localsgd)
+    — reconfiguration as *mitigation*, the paper's core pitch,
+  * elastic restart: on membership change, re-negotiate via rendezvous, then
+    restore the latest checkpoint onto the new mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.comm.chunnels import StepChunnel, init_grad_states, make_transport
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingConfig, TrainConfig
+from repro.core import KVStore, Stack, make_stack
+from repro.core.stack import ConcreteStack
+from repro.core import rendezvous
+from repro.models.registry import Model, build
+from repro.train import step as step_mod
+
+
+@dataclass
+class HostSpec:
+    host_id: int
+    offers: List[str]  # transport names this host supports, in preference order
+
+
+@dataclass
+class StragglerPolicy:
+    window: int = 16
+    slow_factor: float = 1.5
+    fallback: str = "compressed_int8"  # negotiated transition target
+
+
+class ReconfigurableTrainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: ShapeConfig,
+        mesh,
+        *,
+        tcfg: TrainConfig = TrainConfig(),
+        sharding: ShardingConfig = ShardingConfig(),
+        transport: str = "xla",
+        ckpt_dir: Optional[str] = None,
+        store: Optional[KVStore] = None,
+        hosts: Optional[Sequence[HostSpec]] = None,
+        conn_id: str = "trainjob",
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.sharding = sharding
+        self.store = store or KVStore()
+        self.conn_id = conn_id
+        self.hosts = list(hosts or [HostSpec(0, [transport])])
+        self.transport_name = self._negotiate_transport()
+        self.model = build(cfg, mesh=mesh)
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.step_times: List[float] = []
+        self.reconfig_log: List[dict] = []
+        self._build_step()
+
+    # -- negotiation (multi-party, rendezvous §5.3) ----------------------------
+    def _transport_chunnels(self, name: str) -> tuple:
+        if name == "xla" or "pod" not in self.mesh.axis_names:
+            return ()
+        kw = ({"fast_axis": "data", "slow_axis": "pod"}
+              if name in ("hierarchical", "hier_compressed") else {"axis": "pod"})
+        return (make_transport(name, **kw),)
+
+    def _negotiate_transport(self) -> str:
+        chosen = None
+        for h in self.hosts:
+            descs = [[{"name": t, "caps": [{"label": f"transport:{t}", "mode": "exact"}],
+                       "upper": "grads", "lower": "unit", "multilateral": True}]
+                     for t in h.offers]
+
+            def compat(committed_desc, h=h):
+                names = {c["name"] for c in committed_desc}
+                for i, t in enumerate(h.offers):
+                    if t in names:
+                        return i
+                return None
+
+            member = f"host{h.host_id}"
+            try:
+                res = rendezvous.join(self.store, self.conn_id, member,
+                                      h.offers, descs, compat)
+                chosen = res.stack_desc[0]["name"]
+            except ValueError:
+                # §5.3: an incompatible joiner proposes a transition to a stack
+                # it supports; existing members vote (accept iff they offer it)
+                committed = False
+                for idx, target in enumerate(h.offers):
+                    epoch = rendezvous.propose_transition(
+                        self.store, self.conn_id, member, target, descs[idx])
+                    members = self.store.get(f"{self.conn_id}/members") or {}
+                    for m in members:
+                        voter = next((x for x in self.hosts
+                                      if f"host{x.host_id}" == m), None)
+                        ok = voter is not None and target in voter.offers
+                        rendezvous.vote(self.store, self.conn_id, m, epoch, ok)
+                    rendezvous.vote(self.store, self.conn_id, member, epoch, True)
+                    # proposer must be a member for commit accounting
+                    if rendezvous.try_commit(self.store, self.conn_id, epoch, 5.0):
+                        committed = True
+                        res = rendezvous.join(self.store, self.conn_id, member,
+                                              h.offers, descs, compat)
+                        chosen = res.stack_fp
+                        break
+                if not committed:
+                    raise
+        return chosen or "xla"
+
+    # -- step construction -------------------------------------------------------
+    def _build_step(self) -> None:
+        self.chunnels = self._transport_chunnels(self.transport_name)
+        self.jitted = step_mod.jit_train_step(
+            self.model, self.tcfg, self.chunnels, self.mesh, self.sharding,
+            self.model.batch_specs(self.shape), donate=False)
+        self.state_sh, _ = step_mod.shardings_for(
+            self.model, self.mesh, self.sharding, self.chunnels)
+
+    def init_state(self, rng) -> step_mod.TrainState:
+        st = step_mod.init_state(self.model, rng, self.tcfg)
+        comm = init_grad_states(self.chunnels, self.model.param_shapes())
+        comm = jax.tree.map(
+            lambda s: jax.numpy.zeros(s.shape, s.dtype) if hasattr(s, "shape") else s,
+            comm,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        st = st._replace(comm=comm)
+        # place the state on the mesh with the step's shardings
+        return jax.tree.map(jax.device_put, st, self.state_sh)
+
+    # -- training loop --------------------------------------------------------------
+    def run(self, state, batches: Callable[[int], dict], num_steps: int,
+            *, ckpt_every: int = 0, straggler: Optional[StragglerPolicy] = None,
+            inject_slow: Optional[Callable[[int], float]] = None) -> tuple:
+        metrics_hist = []
+        for i in range(num_steps):
+            step_idx = int(state.step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batches(step_idx).items()}
+            t0 = time.perf_counter()
+            state, metrics = self.jitted(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if inject_slow is not None:
+                extra = inject_slow(step_idx)
+                if extra > 0:
+                    time.sleep(extra)
+                    dt += extra
+            self.step_times.append(dt)
+            metrics_hist.append({k: float(v) for k, v in metrics.items()})
+            if ckpt_every and self.ckpt and (step_idx + 1) % ckpt_every == 0:
+                self.ckpt.save(step_idx + 1, state, asynchronous=True)
+            if straggler is not None:
+                state = self._maybe_mitigate(state, straggler)
+        if self.ckpt:
+            self.ckpt.wait()
+        return state, metrics_hist
+
+    # -- straggler mitigation via reconfiguration -----------------------------------
+    def _maybe_mitigate(self, state, pol: StragglerPolicy):
+        if self.transport_name == pol.fallback or len(self.step_times) < 2 * pol.window:
+            return state
+        recent = np.median(self.step_times[-pol.window:])
+        base = np.median(self.step_times[: pol.window])
+        if recent > pol.slow_factor * base:
+            state = self.reconfigure(state, pol.fallback)
+        return state
+
+    def reconfigure(self, state, new_transport: str):
+        """Negotiated transition (2PC via rendezvous) + state migration + re-jit."""
+        desc = [{"name": new_transport,
+                 "caps": [{"label": f"transport:{new_transport}", "mode": "exact"}],
+                 "upper": "grads", "lower": "unit", "multilateral": True}]
+        epoch = rendezvous.propose_transition(
+            self.store, self.conn_id, "host0", new_transport, desc)
+        for h in self.hosts:  # every host votes (here: all accept if they offer it)
+            ok = new_transport in h.offers or h.host_id == 0
+            rendezvous.vote(self.store, self.conn_id, f"host{h.host_id}", epoch, ok)
+        committed = rendezvous.try_commit(self.store, self.conn_id, epoch, timeout_s=5.0)
+        if not committed:
+            self.reconfig_log.append({"to": new_transport, "committed": False})
+            return state
+        old = self.transport_name
+        self.transport_name = new_transport
+        self._build_step()
+        # state migration: grads/opt carry over; chunnel state re-initialized
+        # for the new wire format (EF residuals cannot survive a format change)
+        comm = init_grad_states(self.chunnels, self.model.param_shapes())
+        comm = jax.tree.map(
+            lambda s: jax.numpy.zeros(s.shape, s.dtype) if hasattr(s, "shape") else s,
+            comm, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        state = state._replace(comm=comm)
+        state = jax.tree.map(jax.device_put, state, self.state_sh)
+        self.reconfig_log.append({"from": old, "to": new_transport, "committed": True,
+                                  "at_step": int(state.step)})
+        return state
+
+    # -- checkpoint/restart -----------------------------------------------------------
+    def save(self, state, step: Optional[int] = None):
+        assert self.ckpt is not None
+        self.ckpt.save(step if step is not None else int(state.step), state)
+
+    def restore(self, like=None):
+        assert self.ckpt is not None
+        like = like if like is not None else step_mod.state_shapes(self.model, self.chunnels)
+        return self.ckpt.restore(like)

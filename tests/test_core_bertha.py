@@ -1,0 +1,276 @@
+"""Unit + integration tests for the Bertha core (stacks, negotiation,
+reconfiguration, rendezvous)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    BarrierConn,
+    Capability,
+    CapabilitySet,
+    Fabric,
+    FabricTransport,
+    FnChunnel,
+    HostAgent,
+    KVStore,
+    LinkModel,
+    LockedConn,
+    NegotiationError,
+    Select,
+    Stack,
+    StackTypeError,
+    WireType,
+    make_stack,
+)
+from repro.core import rendezvous
+
+
+def T(name, upper, lower, caps=None, multilateral=False):
+    return FnChunnel(
+        fn_name=name,
+        upper=WireType.of(upper),
+        lower=WireType.of(lower),
+        caps=caps,
+        multilateral_=multilateral,
+    )
+
+
+class TestStackTyping:
+    def test_compose_ok(self):
+        s = make_stack(T("Ser", "obj", "bytes"), T("Udp", "bytes", "unit"))
+        assert len(s.preferred()) == 2
+
+    def test_type_mismatch_rejected_at_assembly(self):
+        with pytest.raises(StackTypeError):
+            make_stack(T("Ser", "obj", "bytes"), T("Tcp", "string", "unit"))
+
+    def test_select_filters_ill_typed_branches(self):
+        s = make_stack(
+            T("Ser", "obj", "bytes"),
+            Select(T("Bad", "string", "unit"), T("Udp", "bytes", "unit")),
+        )
+        opts = s.options()
+        assert len(opts) == 1 and opts[0].chunnels[1].name == "Udp"
+
+    def test_select_preference_order(self):
+        s = make_stack(Select(T("A", "bytes", "unit"), T("B", "bytes", "unit")))
+        assert [o.chunnels[0].name for o in s.options()] == ["A", "B"]
+
+    def test_nested_select(self):
+        s = make_stack(
+            Select(
+                T("PSP", "bytes", "unit"),
+                Select(T("QUIC", "bytes", "unit"),
+                       (T("TLS", "bytes", "bytes"), T("TCP", "bytes", "unit"))),
+            )
+        )
+        names = [" ".join(c.name for c in o) for o in s.options()]
+        assert names == ["PSP", "QUIC", "TLS TCP"]  # paper §7.1 example
+
+    def test_composition_not_commutative(self):
+        a, b = T("A", "x", "x"), T("B", "x", "x")
+        assert make_stack(a, b).preferred().fingerprint() != make_stack(
+            b, a).preferred().fingerprint()
+
+
+class TestCapabilities:
+    def test_exact_must_match_both(self):
+        a = CapabilitySet.exact("ser:protobuf")
+        b = CapabilitySet.exact("ser:protobuf")
+        c = CapabilitySet.exact("ser:capnproto")
+        assert a.compatible_with(b)
+        assert not a.compatible_with(c)
+
+    def test_compose_one_side_suffices(self):
+        a = CapabilitySet.exact("ser:pb").union_(CapabilitySet.compose("shard"))
+        b = CapabilitySet.exact("ser:pb")
+        assert a.compatible_with(b) and b.compatible_with(a)
+
+    def test_relative_compat_reuse_label(self):
+        # ProtoACC reuses the protobuf capability label (paper §5.2)
+        sw = CapabilitySet.exact("ser:protobuf")
+        hw = CapabilitySet.exact("ser:protobuf")  # different impl, same label
+        assert sw.compatible_with(hw)
+
+
+def _mk_pair(fabric, caps_client=None, caps_server=None, server_first=True):
+    server = HostAgent(fabric, "srv")
+    client = HostAgent(fabric, "cli")
+    return server, client
+
+
+class TestNegotiation:
+    def test_one_rtt_negotiation(self):
+        fabric = Fabric()
+        server, client = _mk_pair(fabric)
+        sstack = make_stack(
+            Select(
+                T("Kafka", "obj", "unit", CapabilitySet.exact("pubsub:kafka")),
+                T("SQS", "obj", "unit", CapabilitySet.exact("pubsub:sqs")),
+            )
+        )
+        cstack = make_stack(T("SQS", "obj", "unit", CapabilitySet.exact("pubsub:sqs")))
+        server.listen(sstack)
+        conn = client.connect("srv", cstack)
+        assert conn.stack.chunnels[0].name == "SQS"
+        assert server.accept_stack("cli").chunnels[0].name == "SQS"
+        server.close(); client.close()
+
+    def test_incompatible_rejected(self):
+        fabric = Fabric()
+        server, client = _mk_pair(fabric)
+        server.listen(make_stack(T("A", "obj", "unit", CapabilitySet.exact("fmt:a"))))
+        with pytest.raises(NegotiationError):
+            client.connect("srv", make_stack(T("B", "obj", "unit",
+                                               CapabilitySet.exact("fmt:b"))))
+        server.close(); client.close()
+
+    def test_negotiation_over_lossy_base_connection(self):
+        fabric = Fabric(default_link=LinkModel(latency_s=0.001, loss=0.3), seed=7)
+        server, client = _mk_pair(fabric)
+        st = make_stack(T("X", "obj", "unit", CapabilitySet.exact("x")))
+        server.listen(st)
+        conn = client.connect("srv", st)  # reliability layer must recover
+        assert conn.stack.chunnels[0].name == "X"
+        server.close(); client.close()
+
+    def test_zero_rtt_resumption(self):
+        fabric = Fabric()
+        server, client = _mk_pair(fabric)
+        st = make_stack(T("X", "obj", "unit", CapabilitySet.exact("x")))
+        server.listen(st)
+        c1 = client.connect("srv", st, use_zero_rtt=True)
+        assert not c1.was_zero_rtt  # first connection pays the RTT
+        c2 = client.connect("srv", st, use_zero_rtt=True)
+        assert c2.was_zero_rtt
+        assert c2.stack.fingerprint() == c1.stack.fingerprint()
+        server.close(); client.close()
+
+    def test_server_preference_wins(self):
+        fabric = Fabric()
+        server, client = _mk_pair(fabric)
+        ka = T("Kafka", "obj", "unit", CapabilitySet.exact("pubsub:kafka"))
+        sq = T("SQS", "obj", "unit", CapabilitySet.exact("pubsub:sqs"))
+        server.listen(make_stack(Select(ka, sq)))
+        conn = client.connect("srv", make_stack(Select(sq, ka)))
+        # server prefers kafka; client offered both; server preference rules
+        assert conn.stack.chunnels[0].name == "Kafka"
+        server.close(); client.close()
+
+
+class _CountingChunnel(FnChunnel):
+    pass
+
+
+def _counting(name):
+    calls = {"n": 0}
+
+    def on_send(m):
+        calls["n"] += 1
+        return m
+
+    ch = FnChunnel(fn_name=name, on_send=on_send)
+    return ch, calls
+
+
+class TestReconfiguration:
+    def _echo_stack(self, fabric, name="A"):
+        ep = fabric.register(f"ep-{name}-{time.monotonic_ns()}")
+        ch, calls = _counting(name)
+        st = make_stack(ch, FabricTransport(ep, "nowhere"))
+        return st, calls
+
+    @pytest.mark.parametrize("cls", [LockedConn, BarrierConn])
+    def test_unilateral_swap_preserves_service(self, cls):
+        fabric = Fabric()
+        st_a, calls_a = self._echo_stack(fabric, "A")
+        st_b, calls_b = self._echo_stack(fabric, "B")
+        handle = cls(st_a.preferred()) if cls is LockedConn else cls(
+            st_a.preferred(), n_threads=1)
+
+        stop = threading.Event()
+        sent = {"n": 0}
+
+        def pump():
+            while not stop.is_set():
+                handle.send([b"x"])
+                sent["n"] += 1
+
+        t = threading.Thread(target=pump)
+        t.start()
+        time.sleep(0.05)
+        ok = handle.reconfigure(st_b.preferred())
+        time.sleep(0.05)
+        stop.set(); t.join()
+        assert ok
+        assert calls_a["n"] > 0 and calls_b["n"] > 0  # traffic on both impls
+        assert handle.stats.switches == 1
+        assert sent["n"] == calls_a["n"] + calls_b["n"]  # nothing lost/duplicated
+
+    def test_coordinate_false_aborts(self):
+        fabric = Fabric()
+        st_a, _ = self._echo_stack(fabric, "A")
+        st_b, _ = self._echo_stack(fabric, "B")
+        handle = LockedConn(st_a.preferred())
+        assert handle.reconfigure(st_b.preferred(), coordinate=lambda: False) is False
+        assert handle.stack.chunnels[0].name == "A"
+
+
+class TestRendezvous:
+    def test_first_proposer_wins_cas(self):
+        store = KVStore()
+        r1 = rendezvous.join(store, "conn", "m1", ["fpA"], [[{"name": "A", "caps": []}]],
+                             lambda desc: 0)
+        assert r1.proposed and r1.stack_fp == "fpA"
+        r2 = rendezvous.join(store, "conn", "m2", ["fpB", "fpA"],
+                             [[{"name": "B", "caps": []}], [{"name": "A", "caps": []}]],
+                             lambda desc: 1)
+        assert not r2.proposed and r2.stack_fp == "fpA" and r2.participants == 2
+
+    def test_incompatible_joiner_raises(self):
+        store = KVStore()
+        rendezvous.join(store, "conn", "m1", ["fpA"], [[{"name": "A", "caps": []}]],
+                        lambda desc: 0)
+        with pytest.raises(ValueError):
+            rendezvous.join(store, "conn", "m2", ["fpB"], [[{"name": "B", "caps": []}]],
+                            lambda desc: None)
+
+    def test_late_joiner_recovers_stack(self):
+        store = KVStore()
+        rendezvous.join(store, "conn", "m1", ["fpA"], [[{"name": "A", "caps": []}]],
+                        lambda desc: 0)
+        cur = rendezvous.current_stack(store, "conn")
+        assert cur["fp"] == "fpA" and cur["epoch"] == 1
+
+    def test_transition_commits_when_all_ack(self):
+        store = KVStore()
+        for m in ("m1", "m2", "m3"):
+            rendezvous.join(store, "conn", m, ["fpA"], [[{"name": "A", "caps": []}]],
+                            lambda desc: 0)
+        epoch = rendezvous.propose_transition(store, "conn", "m1", "fpB",
+                                              [{"name": "B", "caps": []}])
+        assert rendezvous.try_commit(store, "conn", epoch, 5.0) is None  # pending
+        rendezvous.vote(store, "conn", "m2", epoch, True)
+        rendezvous.vote(store, "conn", "m3", epoch, True)
+        assert rendezvous.try_commit(store, "conn", epoch, 5.0) is True
+        assert rendezvous.current_stack(store, "conn")["fp"] == "fpB"
+
+    def test_any_refusal_aborts(self):
+        store = KVStore()
+        for m in ("m1", "m2"):
+            rendezvous.join(store, "conn", m, ["fpA"], [[{"name": "A", "caps": []}]],
+                            lambda desc: 0)
+        epoch = rendezvous.propose_transition(store, "conn", "m1", "fpB", [])
+        rendezvous.vote(store, "conn", "m2", epoch, False)
+        assert rendezvous.try_commit(store, "conn", epoch, 5.0) is False
+        assert rendezvous.current_stack(store, "conn")["fp"] == "fpA"
+
+    def test_timeout_aborts(self):
+        store = KVStore()
+        for m in ("m1", "m2"):
+            rendezvous.join(store, "conn", m, ["fpA"], [[{"name": "A", "caps": []}]],
+                            lambda desc: 0)
+        epoch = rendezvous.propose_transition(store, "conn", "m1", "fpB", [])
+        t0 = time.monotonic() - 10.0
+        assert rendezvous.try_commit(store, "conn", epoch, 5.0, t0) is False

@@ -1,0 +1,101 @@
+"""Roofline FLOPs validation: the analytic model vs XLA cost_analysis on an
+UNROLLED single-device compile (where cost_analysis counts everything exactly
+once — see DESIGN.md §7 for why the scanned/partitioned numbers can't be used
+directly)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import flops as F
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.models import build
+
+
+def hlo_flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return c.cost_analysis()["flops"]
+
+
+class TestAnalyticFlops:
+    def test_dense_fwd_matches_hlo_unrolled(self):
+        """Forward-only FLOPs of a small dense config: analytic within 15% of
+        the unrolled single-device HLO count."""
+        cfg = get_config("llama3.2-1b").replace(
+            num_layers=2, scan_layers=False, remat="none", attn_impl="xla_dense",
+            loss_chunk=None, vocab_size=1024)
+        B, S = 2, 256
+        shape = ShapeConfig("probe", S, B, "train")
+        model = build(cfg)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        params = model.param_shapes()
+        measured = hlo_flops(model.loss, params, batch)
+        layers_fwd, head_fwd = F.fwd_flops_layerwise(cfg, shape, "train")
+        analytic = layers_fwd + head_fwd
+        ratio = measured / analytic
+        assert 0.85 < ratio < 1.15, f"fwd ratio {ratio}"
+
+    def test_dense_train_matches_hlo_unrolled(self):
+        """fwd+bwd (remat=none => 3x matmul fwd cost) within 20%."""
+        cfg = get_config("llama3.2-1b").replace(
+            num_layers=2, scan_layers=False, remat="none", attn_impl="xla_dense",
+            loss_chunk=None, vocab_size=1024)
+        B, S = 2, 256
+        shape = ShapeConfig("probe", S, B, "train")
+        model = build(cfg)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        params = model.param_shapes()
+        measured = hlo_flops(jax.grad(model.loss), params, batch)
+        layers_fwd, head_fwd = F.fwd_flops_layerwise(cfg, shape, "train")
+        analytic = 3.0 * (layers_fwd + head_fwd)  # bwd = 2x fwd matmuls
+        ratio = measured / analytic
+        assert 0.75 < ratio < 1.25, f"train ratio {ratio}"
+
+    def test_param_counts_match_declared_sizes(self):
+        """Analytic parameter counts land near the archs' declared sizes."""
+        expected = {
+            "qwen2-7b": 7.6e9,
+            "granite-34b": 34e9,
+            "llama3.2-1b": 1.3e9,
+            "mistral-nemo-12b": 12.5e9,
+            "qwen3-moe-235b-a22b": 235e9,
+            "dbrx-132b": 132e9,
+            "xlstm-125m": 0.16e9,
+            "phi-3-vision-4.2b": 3.9e9,
+            "hymba-1.5b": 1.6e9,
+        }
+        for arch, want in expected.items():
+            got = F.param_count(get_config(arch))
+            assert 0.7 < got / want < 1.35, f"{arch}: {got/1e9:.1f}B vs {want/1e9:.1f}B"
+
+    def test_moe_active_params(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        active = F.active_param_count(cfg)
+        assert 0.7 < active / 22e9 < 1.4, f"active {active/1e9:.1f}B vs ~22B"
+
+    def test_decode_flops_scale_with_cache(self):
+        cfg = get_config("llama3.2-1b")
+        c1 = F.step_cost(cfg, ShapeConfig("d", 1024, 8, "decode"), {"data": 16, "model": 16})
+        c2 = F.step_cost(cfg, ShapeConfig("d", 32768, 8, "decode"), {"data": 16, "model": 16})
+        assert c2.flops > c1.flops  # attention grows with cache
+        assert c2.bytes_hbm > c1.bytes_hbm  # cache read dominates
+
+    def test_param_count_matches_real_tree(self):
+        """Analytic count within 2% of the actual initialized tree (smoke cfg,
+        modulo vocab padding which the analytic model excludes)."""
+        for arch in ("qwen2-7b", "hymba-1.5b", "xlstm-125m"):
+            cfg = get_smoke_config(arch)
+            model = build(cfg)
+            tree = model.param_shapes()
+            n_real = sum(np.prod(l.shape) for l in jax.tree.leaves(tree))
+            n_analytic = F.param_count(cfg)
+            pad = (cfg.vocab_padded - cfg.vocab_size) * cfg.d_model
+            n_real_unpadded = n_real - pad * (1 if cfg.tie_embeddings else 2)
+            assert abs(n_real_unpadded - n_analytic) / n_real < 0.1, arch

@@ -1,0 +1,159 @@
+"""Substrate tests: data determinism, checkpoint atomicity/resharding,
+trainer negotiation + live reconfiguration + straggler mitigation."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.data.synthetic import SyntheticLM, DataConfig, batches_for
+from repro.launch.mesh import make_test_mesh
+from repro.train.trainer import HostSpec, ReconfigurableTrainer, StragglerPolicy
+
+
+class TestData:
+    def test_deterministic_resume(self):
+        ds = SyntheticLM(DataConfig(seq_len=32, global_batch=4))
+        a = ds.batch(7)
+        b = ds.batch(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_sharded_equals_global(self):
+        """2 hosts' shards concatenate to the 1-host global batch (elastic
+        resharding invariant)."""
+        cfg = DataConfig(seq_len=16, global_batch=4)
+        full = SyntheticLM(cfg).batch(3)
+        h0 = SyntheticLM(cfg, host_id=0, num_hosts=2).batch(3)
+        h1 = SyntheticLM(cfg, host_id=1, num_hosts=2).batch(3)
+        np.testing.assert_array_equal(
+            full["tokens"], np.concatenate([h0["tokens"], h1["tokens"]]))
+
+    def test_labels_are_shifted_tokens(self):
+        b = SyntheticLM(DataConfig(seq_len=32, global_batch=2)).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestCheckpoint:
+    def test_roundtrip_mixed_dtypes(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        state = {"w": jnp.arange(6.0).reshape(2, 3),
+                 "m": jnp.ones((4,), jnp.bfloat16),
+                 "n": jnp.asarray(3, jnp.int32)}
+        ck.save(5, state)
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        restored, step = ck.restore(like)
+        assert step == 5
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+                     state, restored)
+
+    def test_crash_mid_save_keeps_previous(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(1, {"w": jnp.zeros(3)})
+        # simulate a crash: a stale tmp dir from a dead writer
+        (tmp_path / "step_2.tmp").mkdir()
+        (tmp_path / "step_2.tmp" / "garbage").write_text("x")
+        restored, step = ck.restore({"w": jax.ShapeDtypeStruct((3,), jnp.float32)})
+        assert step == 1
+
+    def test_gc_keeps_last_k(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"w": jnp.zeros(2)})
+        assert ck.steps() == [3, 4]
+
+    def test_async_save_consistent_cut(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        x = jnp.ones(4)
+        fut = ck.save(1, {"w": x}, asynchronous=True)
+        fut.result()
+        restored, _ = ck.restore({"w": jax.ShapeDtypeStruct((4,), jnp.float32)})
+        np.testing.assert_array_equal(np.asarray(restored["w"]), 1.0)
+
+    def test_restore_with_resharding(self, tmp_path):
+        """Elastic restart: restore onto a different mesh layout."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        ck = Checkpointer(tmp_path)
+        state = {"w": jnp.arange(16.0).reshape(4, 4)}
+        ck.save(1, state)
+        mesh = make_test_mesh((2, 4))
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        restored, _ = ck.restore(
+            {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+        assert restored["w"].sharding.spec == P("data", None)
+
+
+@pytest.fixture(scope="module")
+def pod_mesh():
+    m = make_test_mesh((2, 4), ("pod", "model"))
+    jax.set_mesh(m)
+    return m
+
+
+class TestTrainer:
+    def _trainer(self, pod_mesh, transport="psum", hosts=None, **kw):
+        cfg = get_smoke_config("llama3.2-1b")
+        shape = ShapeConfig("t", 64, 4, "train")
+        return ReconfigurableTrainer(
+            cfg, shape, pod_mesh,
+            tcfg=TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=50),
+            transport=transport,
+            hosts=hosts or [HostSpec(0, [transport, "xla"])],
+            **kw,
+        ), cfg, shape
+
+    def test_negotiation_picks_common_transport(self, pod_mesh):
+        tr, _, _ = self._trainer(
+            pod_mesh, transport="psum",
+            hosts=[HostSpec(0, ["compressed_int8", "psum"]),
+                   HostSpec(1, ["psum"])])  # host1 can't do compressed
+        # first proposer commits compressed_int8? host0 proposes first; host1
+        # must be compatible -> host1 joins via its psum? Incompatible would
+        # raise; compatible via the committed stack name check:
+        assert tr.transport_name in ("compressed_int8", "psum")
+
+    def test_train_and_reconfigure_preserves_state(self, pod_mesh):
+        tr, cfg, shape = self._trainer(pod_mesh, transport="psum")
+        gen = batches_for(cfg, shape)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        state, h1 = tr.run(state, gen, 6)
+        step_before = int(state.step)
+        state = tr.reconfigure(state, "compressed_int8")
+        assert tr.transport_name == "compressed_int8"
+        assert int(state.step) == step_before  # params/opt state carried over
+        state, h2 = tr.run(state, gen, 6)
+        assert np.isfinite(h2[-1]["loss"])
+        # EF residual state was created for the new wire format
+        assert tr.reconfig_log[-1]["committed"]
+
+    def test_straggler_triggers_reconfiguration(self, pod_mesh):
+        tr, cfg, shape = self._trainer(pod_mesh, transport="psum")
+        gen = batches_for(cfg, shape)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        pol = StragglerPolicy(window=3, slow_factor=1.5, fallback="compressed_int8")
+        state, _ = tr.run(state, gen, 14, straggler=pol,
+                          inject_slow=lambda i: 0.3 if i >= 6 else 0.0)
+        assert tr.transport_name == "compressed_int8"
+        assert any(r.get("committed") for r in tr.reconfig_log)
+
+    def test_checkpoint_restart_loss_continuity(self, pod_mesh, tmp_path):
+        tr, cfg, shape = self._trainer(pod_mesh, transport="psum",
+                                       ckpt_dir=str(tmp_path))
+        gen = batches_for(cfg, shape)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        state, h1 = tr.run(state, gen, 8)
+        tr.save(state)
+        restored, at = tr.restore()
+        assert at == 8
+        state2, h2 = tr.run(restored, gen, 4)
+        assert np.isfinite(h2[-1]["loss"])
+        assert h2[-1]["loss"] < h1[0]["loss"]
