@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
 import traceback
@@ -27,7 +29,31 @@ MODULES = [
 ]
 
 
+def smoke() -> None:
+    """Dry pass for CI (scripts/verify.sh): import every bench module (their
+    heavy work lives in main(), so imports are cheap) and run one compat
+    mesh + shard_map sanity. Fails loudly on any import or compat regression."""
+    from benchmarks import common
+    from repro import compat
+
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        importlib.import_module(mod_name)
+        print(f"# {mod_name} import ok", file=sys.stderr)
+    common.smoke_check()
+    print("# smoke ok on jax compat paths:", file=sys.stderr)
+    for line in compat.report().splitlines():
+        print(f"#   {line}", file=sys.stderr)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="import-and-sanity dry pass (no full benchmarks)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     print("name,us_per_call,derived")
     failures = 0
     for mod_name in MODULES:

@@ -4,6 +4,7 @@
 """
 import jax
 
+from repro import compat
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.core import Fabric, FnChunnel, HostAgent, Select, make_stack
@@ -31,7 +32,7 @@ server.close(); client.close()
 cfg = get_smoke_config("llama3.2-1b")
 shape = ShapeConfig("quickstart", 128, 8, "train")
 mesh = make_test_mesh((1, 1))
-jax.set_mesh(mesh)
+compat.set_mesh(mesh)
 
 trainer = ReconfigurableTrainer(
     cfg, shape, mesh,

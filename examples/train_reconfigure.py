@@ -14,6 +14,7 @@ import tempfile
 
 import jax
 import numpy as np
+from repro import compat
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig, TrainConfig
@@ -30,7 +31,7 @@ def main():
     cfg = get_smoke_config("llama3.2-1b")
     shape = ShapeConfig("e2e", 128, 8, "train")
     mesh = make_test_mesh((2, 4), ("pod", "model"))  # tiny 'pod' axis on CPU
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     ckpt_dir = tempfile.mkdtemp(prefix="berthax-ckpt-")
 
     trainer = ReconfigurableTrainer(

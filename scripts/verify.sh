@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# One-stop verification entrypoint (CI + pre-PR):
+#   1. compat feature report  — fails if the compat layer cannot bind on this JAX
+#   2. tier-1 test suite      — pyproject pythonpath makes the prefix optional,
+#                               but we keep it so the script also works on
+#                               pytest < 7 installs
+#   3. benchmark smoke pass   — import + mesh/shard_map sanity for the bench tier
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== repro.compat report =="
+python -m repro.compat
+
+echo "== tier-1 tests =="
+python -m pytest -q
+
+echo "== benchmark smoke =="
+python -m benchmarks.run --smoke
+
+echo "verify.sh: all green"

@@ -23,6 +23,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.comm import compress
 
 
@@ -55,7 +57,7 @@ def pmean_tree(tree, axis: str):
 
 def ring_allreduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Ring all-reduce of a flat vector via 2(n-1) collective-permutes."""
-    n = jax.lax.axis_size(axis)
+    n = compat.named_axis_size(axis)
     if n == 1:
         return x
     rank = jax.lax.axis_index(axis)
@@ -96,7 +98,7 @@ def hierarchical_tree(tree, fast_axis: str, slow_axis: str):
     across the slow tier instead of the full tree.
     """
     flat, shapes, treedef = _flatten(tree)
-    n_fast = jax.lax.axis_size(fast_axis)
+    n_fast = compat.named_axis_size(fast_axis)
     pad = (-flat.shape[0]) % n_fast
     xp = jnp.pad(flat, (0, pad))
     shard = jax.lax.psum_scatter(xp.reshape(n_fast, -1), fast_axis, scatter_dimension=0,
@@ -113,7 +115,7 @@ def compressed_allgather_sum(x: jnp.ndarray, axis: str, *, block: int = 256,
     Each rank quantizes its vector, all-gathers the (int8, fp32-scale) pair
     (1/4 the fp32 bytes + ~1/block scale overhead) and dequant-sums locally.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.named_axis_size(axis)
     if n == 1:
         return x
     q, scales = compress.quantize_int8(x, block=block, use_kernel=use_kernel)
@@ -135,7 +137,7 @@ def hierarchical_compressed_tree(tree, fast_axis: str, slow_axis: str, *, block:
                                  use_kernel: bool = False):
     """Beyond-paper combination: RS(fast) -> compressed AR(slow) -> AG(fast)."""
     flat, shapes, treedef = _flatten(tree)
-    n_fast = jax.lax.axis_size(fast_axis)
+    n_fast = compat.named_axis_size(fast_axis)
     pad = (-flat.shape[0]) % n_fast
     xp = jnp.pad(flat, (0, pad))
     shard = jax.lax.psum_scatter(xp.reshape(n_fast, -1), fast_axis, scatter_dimension=0,

@@ -18,6 +18,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 
 from repro.core.capability import CapabilitySet
 from repro.comm.chunnels import StepChunnel
@@ -72,7 +73,7 @@ def make_seq_sharded_decode(mesh, axis: str = "model"):
             out = o_g / jnp.maximum(l_g, 1e-20)[..., None]
             return out[:, None].astype(q_.dtype)  # (B,1,H,hd)
 
-        f = jax.shard_map(
+        f = compat.shard_map(
             inner,
             mesh=mesh,
             in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P()),

@@ -1,0 +1,65 @@
+"""JAX version-compatibility layer (supported: 0.4.x floor 0.4.37 → 0.6.x).
+
+One probed-once adaptation layer (see PAPERS.md: Morpheus; online code
+specialization) so the rest of the stack never touches a version-gated
+JAX symbol. Everything mesh-, axis-type- or shard_map-shaped goes
+through here:
+
+    from repro import compat
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    compat.set_mesh(mesh)
+    f = compat.shard_map(fn, mesh=mesh, in_specs=..., out_specs=...,
+                         check_vma=False, axis_names={"data"})
+
+``python -m repro.compat`` prints the feature-detection report.
+"""
+from repro.compat.jaxapi import (  # noqa: F401
+    AUTO,
+    EXPLICIT,
+    MANUAL,
+    AxisType,
+    axis_is_auto,
+    axis_size,
+    cost_analysis,
+    current_mesh,
+    get_abstract_mesh,
+    make_mesh,
+    manual_axes_in_scope,
+    named_axis_size,
+    set_mesh,
+    shard_map,
+    tree_map,
+    use_mesh,
+)
+from repro.compat.versions import (  # noqa: F401
+    JAX_VERSION,
+    features,
+    has,
+    jax_at_least,
+    report,
+)
+
+__all__ = [
+    "AUTO",
+    "EXPLICIT",
+    "MANUAL",
+    "AxisType",
+    "axis_is_auto",
+    "axis_size",
+    "cost_analysis",
+    "current_mesh",
+    "get_abstract_mesh",
+    "make_mesh",
+    "manual_axes_in_scope",
+    "named_axis_size",
+    "set_mesh",
+    "shard_map",
+    "tree_map",
+    "use_mesh",
+    "JAX_VERSION",
+    "features",
+    "has",
+    "jax_at_least",
+    "report",
+]

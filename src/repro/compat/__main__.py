@@ -1,0 +1,5 @@
+"""``python -m repro.compat`` — print the environment/feature report."""
+from repro.compat import report
+
+if __name__ == "__main__":
+    print(report())

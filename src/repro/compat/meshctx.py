@@ -1,0 +1,143 @@
+"""Mesh-context tracking that works on every supported JAX.
+
+On JAX >= 0.5 the library itself tracks the active mesh
+(``jax.sharding.use_mesh`` / ``jax.set_mesh`` + ``get_abstract_mesh``).
+On 0.4.x there is no abstract-mesh context, so this module keeps the
+process-wide active mesh itself: ``set_mesh``/``use_mesh`` enter the
+physical ``with mesh:`` context (which is what makes bare-PartitionSpec
+``with_sharding_constraint`` work under jit on 0.4.x) and record the
+mesh so :func:`current_mesh` can answer without private attributes.
+
+It also owns the axis-type side table: on JAX versions whose ``Mesh``
+cannot carry axis types, ``compat.make_mesh`` records the requested
+types here and ``compat.axis_is_auto`` consults the table, so consumers
+never reach into ``mesh._name_to_type``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import weakref
+from typing import Dict, Optional
+
+import jax
+
+from repro.compat.versions import has
+
+# ---------------------------------------------------------------------------
+# axis-type side table
+# ---------------------------------------------------------------------------
+
+# id(mesh) -> {axis_name: AxisType-like}, purged by a weakref finalizer when
+# the mesh dies. Keyed by identity, not the mesh itself: Mesh hashes/compares
+# by value, so value-equal meshes would alias one entry and a WeakKeyDictionary
+# would drop a live mesh's record when an equal, earlier mesh is collected.
+_AXIS_TYPES: Dict[int, Dict[str, object]] = {}
+_AXIS_TYPES_LOCK = threading.Lock()
+
+
+def _purge_axis_types(key: int) -> None:
+    with _AXIS_TYPES_LOCK:
+        _AXIS_TYPES.pop(key, None)
+
+
+def record_axis_types(mesh, mapping: Dict[str, object]) -> None:
+    try:
+        weakref.finalize(mesh, _purge_axis_types, id(mesh))
+    except TypeError:  # un-weakref-able mesh stand-ins
+        return
+    with _AXIS_TYPES_LOCK:
+        _AXIS_TYPES[id(mesh)] = dict(mapping)
+
+
+def recorded_axis_types(mesh) -> Optional[Dict[str, object]]:
+    with _AXIS_TYPES_LOCK:
+        return _AXIS_TYPES.get(id(mesh))
+
+
+# ---------------------------------------------------------------------------
+# active-mesh tracking (0.4.x path) / delegation (>= 0.5 path)
+# ---------------------------------------------------------------------------
+
+_local = threading.local()
+
+
+def _tracked() -> list:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+# persistent context entered by set_mesh on the legacy path; closed and
+# replaced when set_mesh is called again (tests re-set the mesh per module)
+_persistent: Optional[contextlib.ExitStack] = None
+_persistent_mesh = None
+
+
+def set_mesh(mesh):
+    """Make ``mesh`` the process's ambient mesh (compat ``jax.set_mesh``).
+
+    Returns the mesh so launchers can write ``mesh = compat.set_mesh(m)``.
+    """
+    global _persistent, _persistent_mesh
+    if has("set_mesh"):
+        jax.set_mesh(mesh)
+        _persistent_mesh = mesh
+        return mesh
+    if _persistent is not None:
+        _persistent.close()
+        _persistent = None
+        _persistent_mesh = None
+    es = contextlib.ExitStack()
+    if has("use_mesh"):
+        es.enter_context(jax.sharding.use_mesh(mesh))
+    else:
+        es.enter_context(mesh)  # 0.4.x: thread_resources mesh context
+    _persistent = es
+    _persistent_mesh = mesh
+    return mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Scoped version of :func:`set_mesh` (compat ``jax.sharding.use_mesh``)."""
+    if has("use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield mesh
+        return
+    _tracked().append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _tracked().pop()
+
+
+def current_mesh():
+    """The ambient mesh, or None.
+
+    On >= 0.5 this is the library's abstract mesh; on 0.4.x it is whatever
+    physical mesh ``set_mesh``/``use_mesh``/``with mesh:`` made current.
+    The result always answers ``axis_names`` and sizes (see
+    ``compat.axis_size``); treat it as read-only.
+    """
+    if has("get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and getattr(mesh, "axis_names", ()):
+            return mesh
+        return None
+    stack = _tracked()
+    if stack:
+        return stack[-1]
+    if _persistent_mesh is not None:
+        return _persistent_mesh
+    if has("thread_resources"):
+        try:
+            from jax._src import mesh as mesh_lib
+
+            phys = mesh_lib.thread_resources.env.physical_mesh
+            if phys is not None and not phys.empty:
+                return phys
+        except Exception:
+            pass
+    return None

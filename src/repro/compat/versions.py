@@ -1,0 +1,139 @@
+"""Feature detection for the installed JAX (probed once, cached).
+
+The reconfiguration thesis applies to our own substrate: instead of
+sprinkling ``try/except AttributeError`` at every call site, the
+environment is probed once at import and the right implementation is
+bound (Morpheus-style runtime specialization). Everything outside
+``repro.compat`` talks to the shim in :mod:`repro.compat.jaxapi`;
+this module only answers "what does the installed JAX support?".
+
+Supported range: JAX 0.4.x (floor 0.4.37) through 0.6.x. On 0.4.x the
+explicit axis-type machinery does not exist, so axis types recorded via
+``compat.make_mesh`` are advisory (tracked in a side table) rather than
+enforced by the partitioner.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Dict
+
+import jax
+
+
+def _parse_version(v: str) -> tuple:
+    parts = []
+    for p in v.split("."):
+        digits = ""
+        for ch in p:
+            if ch.isdigit():
+                digits += ch
+            else:
+                break
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts) or (0,)
+
+
+JAX_VERSION: tuple = _parse_version(jax.__version__)
+
+
+def jax_at_least(v: str) -> bool:
+    """True when the installed JAX is at least version ``v`` ("0.5", "0.4.37")."""
+    return JAX_VERSION >= _parse_version(v)
+
+
+def _sig_has(fn, param: str) -> bool:
+    try:
+        return param in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def _probe_internal_axis_types() -> bool:
+    try:
+        from jax._src import mesh as mesh_lib  # noqa: F401
+
+        return hasattr(mesh_lib, "AxisTypes")
+    except Exception:
+        return False
+
+
+def _probe_thread_resources() -> bool:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        return hasattr(mesh_lib, "thread_resources")
+    except Exception:
+        return False
+
+
+#: name -> zero-arg probe. Each answers one capability question; results are
+#: cached in _RESULTS so the environment is only inspected once per process.
+_PROBES: Dict[str, Callable[[], bool]] = {
+    # public axis-type machinery (jax.sharding.AxisType, >= 0.5/0.6)
+    "axis_type": lambda: hasattr(jax.sharding, "AxisType"),
+    # jax.make_mesh exists at top level (>= 0.4.35)
+    "make_mesh": lambda: hasattr(jax, "make_mesh"),
+    # jax.make_mesh accepts axis_types= (>= 0.5)
+    "make_mesh_axis_types": lambda: hasattr(jax, "make_mesh")
+    and _sig_has(jax.make_mesh, "axis_types"),
+    # jax.sharding.get_abstract_mesh (>= 0.5)
+    "get_abstract_mesh": lambda: hasattr(jax.sharding, "get_abstract_mesh"),
+    # jax.set_mesh (>= 0.6) / jax.sharding.use_mesh (>= 0.5)
+    "set_mesh": lambda: hasattr(jax, "set_mesh"),
+    "use_mesh": lambda: hasattr(jax.sharding, "use_mesh"),
+    # top-level jax.shard_map (>= 0.5.3); kwarg generations within it
+    "shard_map": lambda: hasattr(jax, "shard_map"),
+    "shard_map_check_vma": lambda: hasattr(jax, "shard_map")
+    and _sig_has(jax.shard_map, "check_vma"),
+    "shard_map_axis_names": lambda: hasattr(jax, "shard_map")
+    and _sig_has(jax.shard_map, "axis_names"),
+    # jax.lax.axis_size (>= 0.6); older JAX uses static psum(1, axis)
+    "lax_axis_size": lambda: hasattr(jax.lax, "axis_size"),
+    # jax.tree.map namespace (>= 0.4.25; jax.tree_map removed in 0.6)
+    "tree_module": lambda: hasattr(jax, "tree") and hasattr(jax.tree, "map"),
+    # 0.4.x-internal axis-type enum / mesh context plumbing (fallback paths)
+    "internal_axis_types": _probe_internal_axis_types,
+    "thread_resources": _probe_thread_resources,
+}
+
+_RESULTS: Dict[str, bool] = {}
+
+
+def has(feature: str) -> bool:
+    """Cached feature probe, e.g. ``has("axis_types")`` / ``has("set_mesh")``."""
+    # accept the plural alias used in docs/issues
+    if feature == "axis_types":
+        feature = "axis_type"
+    if feature not in _PROBES:
+        raise KeyError(f"unknown compat feature {feature!r}; "
+                       f"known: {sorted(_PROBES)}")
+    if feature not in _RESULTS:
+        try:
+            _RESULTS[feature] = bool(_PROBES[feature]())
+        except Exception:
+            _RESULTS[feature] = False
+    return _RESULTS[feature]
+
+
+def features() -> Dict[str, bool]:
+    return {name: has(name) for name in _PROBES}
+
+
+def report() -> str:
+    """Human-readable account of the probed environment and bound code paths."""
+    from repro.compat import jaxapi  # late import: jaxapi imports this module
+
+    lines = [
+        f"repro.compat: JAX {jax.__version__} "
+        f"(parsed {'.'.join(map(str, JAX_VERSION))}, "
+        f"backend={jax.default_backend()}, devices={jax.device_count()})",
+        "feature probes:",
+    ]
+    for name, ok in sorted(features().items()):
+        lines.append(f"  {'+' if ok else '-'} {name}")
+    lines.append("bound code paths:")
+    for api, path in sorted(jaxapi.bound_paths().items()):
+        lines.append(f"  {api}: {path}")
+    return "\n".join(lines)

@@ -118,22 +118,27 @@ class Stack:
 
     def __init__(self, *entries: Entry):
         self.entries = entries
-        opts = self.options()
-        if not opts:
+        self._options: Optional[List[ConcreteStack]] = None
+        if not self.options():
             raise StackTypeError("stack has no type-correct concrete option")
 
     def options(self) -> List[ConcreteStack]:
         """All type-correct concrete stacks, in developer preference order.
 
         Type-incorrect combinations are rejected here — the 'compile error'
-        happens at assembly, before any connection exists."""
-        out = []
-        for combo in _expand(tuple(self.entries)):
-            try:
-                out.append(ConcreteStack(combo))
-            except StackTypeError:
-                continue
-        return out
+        happens at assembly, before any connection exists. Entries are
+        immutable, so the expansion + type-check cartesian product is
+        computed once and memoized (preferred()/find()/offer() are hot on
+        every negotiation round)."""
+        if self._options is None:
+            out = []
+            for combo in _expand(tuple(self.entries)):
+                try:
+                    out.append(ConcreteStack(combo))
+                except StackTypeError:
+                    continue
+            self._options = out
+        return list(self._options)
 
     def preferred(self) -> ConcreteStack:
         return self.options()[0]

@@ -21,6 +21,7 @@ from pathlib import Path
 
 import jax
 
+from repro import compat
 from repro.analysis import roofline
 from repro.comm.chunnels import make_transport
 from repro.configs import ARCH_IDS, SHAPES, get_config, get_shape, shape_applicable
@@ -63,7 +64,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "skipped": True, "reason": skip_reason}
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)  # enables trace-time activation sharding constraints
+    compat.set_mesh(mesh)  # enables trace-time activation sharding constraints
     sh = ShardingConfig(pod_transport=transport, kv_partition=kv_partition)
     t0 = time.time()
 
@@ -102,7 +103,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
     rf = roofline.analyze(hlo, cfg, shape, mesh_shape)

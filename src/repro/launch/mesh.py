@@ -4,17 +4,19 @@ Functions, not module constants, so importing never touches jax device state.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=(compat.AUTO,) * len(axes))
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=(compat.AUTO,) * len(axes))
 
 
 # TPU v5e hardware model used by the roofline analysis (per chip).

@@ -11,6 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from repro import compat
 
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_test_mesh
@@ -28,7 +29,7 @@ def main() -> None:
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_test_mesh((1, 1))
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     model = build(cfg)
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)

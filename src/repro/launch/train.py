@@ -14,6 +14,7 @@ import time
 
 import jax
 import numpy as np
+from repro import compat
 
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ShapeConfig, ShardingConfig, TrainConfig
@@ -44,7 +45,7 @@ def main() -> None:
         "single": make_production_mesh,
         "multi": lambda: make_production_mesh(multi_pod=True),
     }[args.mesh]()
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
 
     trainer = ReconfigurableTrainer(
         cfg, shape, mesh, tcfg=TrainConfig(warmup_steps=10, total_steps=args.steps),

@@ -18,6 +18,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -227,7 +229,7 @@ def dispatch_alltoall(p, x3d, cfg: ModelConfig, mesh, axis: str = "model",
 
     tok_axes = _token_axes(mesh)
     b_axes = _batch_axes(mesh)
-    f = jax.shard_map(
+    f = compat.shard_map(
         inner,
         mesh=mesh,
         in_specs=(
@@ -291,7 +293,7 @@ def dispatch_allgather(p, x3d, cfg: ModelConfig, mesh, axis: str = "model",
 
     tok_axes = _token_axes(mesh)
     b_axes = _batch_axes(mesh)
-    f = jax.shard_map(
+    f = compat.shard_map(
         inner,
         mesh=mesh,
         in_specs=(

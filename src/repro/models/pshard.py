@@ -15,21 +15,18 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _auto_batch_axes():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.current_mesh()
     if mesh is None or not getattr(mesh, "axis_names", ()):
         return None, ()
-    axes = []
-    for a in ("pod", "data"):
-        if a in mesh.axis_names:
-            try:
-                if mesh._name_to_type[a] != jax.sharding.AxisType.Auto:
-                    continue
-            except Exception:
-                pass
-            axes.append(a)
-    return mesh, tuple(axes)
+    # compat.axis_is_auto logs a failed axis-type probe once at DEBUG
+    # instead of silently treating the axis as constrainable.
+    axes = tuple(a for a in ("pod", "data")
+                 if a in mesh.axis_names and compat.axis_is_auto(mesh, a))
+    return mesh, axes
 
 
 def shard_batch(x, dim: int = 0):
@@ -39,7 +36,7 @@ def shard_batch(x, dim: int = 0):
         return x
     n = 1
     for a in axes:
-        n *= mesh.shape[a]
+        n *= compat.axis_size(mesh, a)
     if x.shape[dim] % n != 0 or x.shape[dim] == 0:
         return x
     spec = [None] * x.ndim
@@ -67,17 +64,16 @@ def shard_activations(x, batch_dim: int = 0, seq_dim: int = 1):
     if axes:
         n = 1
         for a in axes:
-            n *= mesh.shape[a]
+            n *= compat.axis_size(mesh, a)
         if x.shape[batch_dim] % n == 0 and x.shape[batch_dim] > 0:
             spec[batch_dim] = axes if len(axes) > 1 else axes[0]
     if "model" in mesh.axis_names:
-        try:
-            is_auto = mesh._name_to_type["model"] == jax.sharding.AxisType.Auto
-        except Exception:
-            is_auto = True
-        m = mesh.shape["model"]
+        is_auto = compat.axis_is_auto(mesh, "model")
+        m = compat.axis_size(mesh, "model")
         if is_auto and x.shape[seq_dim] % m == 0 and x.shape[seq_dim] >= m:
             spec[seq_dim] = "model"
+    if all(a is None for a in spec):
+        return x
     try:
         return jax.lax.with_sharding_constraint(x, P(*spec))
     except Exception:
@@ -95,13 +91,15 @@ def shard_model_dim(x, dim: int, batch_dim: int = 0):
     if axes:
         n = 1
         for a in axes:
-            n *= mesh.shape[a]
+            n *= compat.axis_size(mesh, a)
         if x.shape[batch_dim] % n == 0 and x.shape[batch_dim] > 0:
             spec[batch_dim] = axes if len(axes) > 1 else axes[0]
-    if "model" in mesh.axis_names:
-        m = mesh.shape["model"]
+    if "model" in mesh.axis_names and compat.axis_is_auto(mesh, "model"):
+        m = compat.axis_size(mesh, "model")
         if x.shape[dim] % m == 0 and x.shape[dim] >= m:
             spec[dim] = "model"
+    if all(a is None for a in spec):
+        return x
     try:
         return jax.lax.with_sharding_constraint(x, P(*spec))
     except Exception:
@@ -119,13 +117,15 @@ def shard_heads(x, batch_dim: int = 0, head_dim: int = 2):
     if axes:
         n = 1
         for a in axes:
-            n *= mesh.shape[a]
+            n *= compat.axis_size(mesh, a)
         if x.shape[batch_dim] % n == 0 and x.shape[batch_dim] > 0:
             spec[batch_dim] = axes if len(axes) > 1 else axes[0]
-    if "model" in mesh.axis_names:
-        m = mesh.shape["model"]
+    if "model" in mesh.axis_names and compat.axis_is_auto(mesh, "model"):
+        m = compat.axis_size(mesh, "model")
         if x.shape[head_dim] % m == 0:
             spec[head_dim] = "model"
+    if all(a is None for a in spec):
+        return x
     try:
         return jax.lax.with_sharding_constraint(x, P(*spec))
     except Exception:

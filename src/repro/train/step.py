@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
+from repro import compat
 
 from repro.comm.chunnels import (
     StepChunnel,
@@ -144,7 +145,7 @@ def make_train_step(
 
         batch_specs = jax.tree.map(lambda _: P(*(tuple(manual),)), batch)
         rep = lambda tree: jax.tree.map(lambda _: P(), tree)
-        f = jax.shard_map(
+        f = compat.shard_map(
             inner,
             mesh=mesh,
             in_specs=(rep(state.params), rep(state.opt), rep(state.comm), P(),

@@ -10,14 +10,15 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.comm import chunnels, compress, kvshard
 from repro.comm import collectives as C
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("pod", "data"),
+                            axis_types=(compat.AUTO,) * 2)
 
 
 def tree_of(key, sizes=((17,), (3, 5), (64,))):
@@ -28,8 +29,8 @@ def tree_of(key, sizes=((17,), (3, 5), (64,))):
 def run_manual(mesh, axes, fn, *args):
     # partial-manual shard_map composes with the auto partitioner, so it must
     # run under jit (as it always does in the real step functions)
-    f = jax.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
-                      check_vma=False, axis_names=set(axes))
+    f = compat.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
+                         check_vma=False, axis_names=set(axes))
     return jax.jit(f)(*args)
 
 

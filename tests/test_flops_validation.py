@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
+
 from repro.analysis import flops as F
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ShapeConfig
@@ -15,7 +17,7 @@ from repro.models import build
 
 def hlo_flops(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    return c.cost_analysis()["flops"]
+    return compat.cost_analysis(c)["flops"]
 
 
 class TestAnalyticFlops:

@@ -1,11 +1,35 @@
 """Pallas kernel validation (interpret mode): shape/dtype sweeps vs the pure
-jnp oracles + hypothesis property tests on the invariants."""
+jnp oracles + hypothesis property tests on the invariants.
+
+hypothesis is an optional dev dependency (requirements-dev.txt): without it
+the property-test methods are skipped while the parametrized oracle sweeps
+still run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+
+    def _skip_without_hypothesis(*_args, **_kwargs):
+        def deco(fn):
+            def stub(*args, **kwargs):
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco
+
+    given = settings = _skip_without_hypothesis
+
+    class st:  # noqa: N801 - stands in for hypothesis.strategies
+        integers = staticmethod(lambda *a, **k: None)
+        floats = staticmethod(lambda *a, **k: None)
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import flash_attention_ref

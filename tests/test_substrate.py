@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from repro import compat
 
 from repro.checkpoint.ckpt import Checkpointer
 from repro.configs import get_smoke_config
@@ -95,7 +96,7 @@ class TestCheckpoint:
 @pytest.fixture(scope="module")
 def pod_mesh():
     m = make_test_mesh((2, 4), ("pod", "model"))
-    jax.set_mesh(m)
+    compat.set_mesh(m)
     return m
 
 

@@ -6,6 +6,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import numpy as np
+from repro import compat
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig, TrainConfig
@@ -18,7 +19,7 @@ def test_end_to_end_train_reconfigure_restore(tmp_path):
     cfg = get_smoke_config("qwen2-7b")
     shape = ShapeConfig("sys", 64, 4, "train")
     mesh = make_test_mesh((2, 4), ("pod", "model"))
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     tr = ReconfigurableTrainer(
         cfg, shape, mesh,
         tcfg=TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=40),
