@@ -1,18 +1,51 @@
-"""Paper Fig. 10 analogue: lock vs lock-free (barrier) reconfiguration.
+"""Paper Fig. 10 analogue: lock vs lock-free (barrier) reconfiguration —
+plus the closed loop: controller-INITIATED switches in both planes.
 
 Measures (a) steady-state per-op latency of each mechanism under multi-thread
 load (the lock's fast-path tax) and (b) the reconfiguration blip (switch
 duration) for each, swapping between two datapath implementations mid-run.
+
+The controller scenarios go beyond the hand-triggered Fig. 10 swap: a
+ReconfigController observes live telemetry and initiates the switch itself —
+
+  kv       the §7.3 serving plane: offered load ramps up and the controller
+           moves the routing Select from ServerRouter to ClientShard (and
+           back when load drains) — the paper's Fig. 6 scenario end-to-end,
+  trainer  the training plane: a straggling pod's heartbeat step times arm
+           the straggler rule and the controller commits a negotiated
+           transition xla -> localsgd mid-run (recovery rule switches back
+           once the straggler heals).
+
+Both scenarios record telemetry before/after each switch and the switch blip
+in benchmarks/out/controller_scenarios.json.
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import sys
 import threading
 import time
 
-import numpy as np
-
 from benchmarks.common import emit, pct
-from repro.core import BarrierConn, Fabric, FabricTransport, FnChunnel, LockedConn, make_stack
+from repro.core import (
+    BarrierConn,
+    Fabric,
+    FabricTransport,
+    FnChunnel,
+    LinkModel,
+    LockedConn,
+    Rule,
+    above,
+    below,
+    conn_controller,
+    make_stack,
+    option_named,
+)
+from repro.serving.router import KVBackend, KVClient, Router, routing_stack
+
+JSON_OUT = pathlib.Path(__file__).parent / "out" / "controller_scenarios.json"
 
 
 def _stack(fabric, tag):
@@ -51,12 +84,182 @@ def run_mechanism(mechanism: str, n_threads: int = 3, duration_s: float = 1.2,
     return lat, switch_s
 
 
+# ---------------------------------------------------------------------------
+# Controller-driven KV serving scenario (§7.3 / Fig. 6, closed loop)
+# ---------------------------------------------------------------------------
+
+
+def run_controller_kv(*, fast: bool = False) -> dict:
+    """Offered load ramps low -> high -> low; the controller (not the bench)
+    initiates the ServerRouter -> ClientShard switch at load and the switch
+    back once load drains.
+
+    The low phases issue closed-loop (blocking) requests; the high phase
+    offers load open-loop — paced fire-and-forget sends through the routing
+    stack with periodic blocking probes for round-trip telemetry — so the
+    measured ops_per_s tracks the *offered* rate (sleep-paced, hence robust
+    to slow CI machines) rather than being capped at 1/rtt."""
+    n_backends = 4
+    # (label, offered_rps, n_req, open_loop)
+    phases_spec = ([("low", 70.0, 40, False), ("high", 450.0, 250, True),
+                    ("low", 55.0, 60, False)]
+                   if fast else
+                   [("low", 80.0, 80, False), ("high", 450.0, 500, True),
+                    ("low", 60.0, 100, False)])
+    tick_every = 10
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0008))
+    backends = [KVBackend(fabric, f"ctlkv{i}", service_time_s=0.0004)
+                for i in range(n_backends)]
+    router = Router(fabric, "ctl-router", [b.addr for b in backends])
+    ep = fabric.register("ctl-cli")
+    stack = routing_stack(ep, [b.addr for b in backends],
+                          router_addr="ctl-router", prefer="server")
+    handle = LockedConn(stack.preferred())  # ServerRouter: the low-load default
+    client = KVClient(fabric, ep, handle)
+    ctl = conn_controller(
+        handle, stack,
+        [
+            Rule("high-load->client-shard", above("ops_per_s", 150.0),
+                 option_named(stack, "ClientShard"), hold=2, priority=1),
+            Rule("low-load->server-router", below("ops_per_s", 120.0),
+                 option_named(stack, "ServerRouter"), hold=2, priority=0),
+        ],
+        cooldown_s=0.2,
+    )
+
+    drain = [None]
+
+    def drain_replies():
+        # AddressedTransport.recv returns after the first message when given
+        # a timeout, so draining the fire-and-forget replies means looping
+        # until the inbox is empty — otherwise stale rid=-1 replies pile up
+        # and skew the next closed-loop phase's measured latency.
+        while handle.recv(drain, timeout=0.001):
+            pass
+
+    phases = []
+    try:
+        for label, rate, n_req, open_loop in phases_spec:
+            gap = 1.0 / rate
+            nxt = time.monotonic()
+            for i in range(n_req):
+                nxt += gap
+                dt = nxt - time.monotonic()
+                if dt > 0:
+                    time.sleep(dt)
+                try:
+                    if open_loop and i % 25 != 0:
+                        handle.send([{"op": "get", "key": f"k{i % 37}",
+                                      "rid": -1, "reply_to": ep.addr}])
+                        if i % 10 == 0:
+                            drain_replies()
+                    else:
+                        client.request("put" if i % 3 == 0 else "get",
+                                       f"k{i % 37}", val=i, timeout=1.0)
+                except TimeoutError:
+                    pass
+                if (i + 1) % tick_every == 0:
+                    ctl.tick(handle.telemetry.snapshot())
+            if open_loop:
+                drain_replies()  # leave no stale replies for the next phase
+            phases.append({
+                "phase": label, "offered_rps": rate, "n_req": n_req,
+                "stack_after": repr(handle.stack),
+                "telemetry_after": (ctl.decisions[-1].snapshot
+                                    if ctl.decisions else {}),
+            })
+    finally:
+        for b in backends:
+            b.close()
+        router.close()
+
+    return {
+        "plane": "kv",
+        "phases": phases,
+        "switches": [d.to_json() for d in ctl.switch_log()],
+        "decisions": [d.to_json() for d in ctl.decisions],
+        "blip_s": handle.stats.last_switch_s,
+        "total_switches": handle.stats.switches,
+        "final_stack": repr(handle.stack),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Controller-driven trainer scenario (straggler mitigation, closed loop)
+# ---------------------------------------------------------------------------
+
+
+def run_controller_trainer(num_steps: int = 18) -> dict:
+    """host1's heartbeat reports a persistent straggler; the trainer's
+    controller commits a negotiated xla -> localsgd transition mid-run and
+    (once the straggler heals) the recovery rule arms the way back."""
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    import jax
+    from repro import compat
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.data.synthetic import batches_for
+    from repro.launch.mesh import make_test_mesh
+    from repro.train.trainer import HostSpec, ReconfigurableTrainer
+
+    n_dev = jax.device_count()
+    mesh_shape = (2, 4) if n_dev >= 8 else ((2, 1) if n_dev >= 2 else (1, 1))
+    mesh = make_test_mesh(mesh_shape, ("pod", "model"))
+    cfg = get_smoke_config("llama3.2-1b")
+    shape = ShapeConfig("ctl", 64, 4, "train")
+    offers = ["xla", "localsgd", "compressed_int8"]
+
+    def pod_times(step_idx, dt):
+        # heartbeat plane: host1 runs 3x slow between steps 4 and 10
+        slow = 3.0 if 4 <= step_idx <= 10 else 1.0
+        return {"host0": dt, "host1": dt * slow}
+
+    # use_mesh (scoped), so the ambient mesh doesn't leak into later bench
+    # modules when this runs inside the full run.py sweep
+    with compat.use_mesh(mesh):
+        tr = ReconfigurableTrainer(
+            cfg, shape, mesh,
+            tcfg=TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=64),
+            transport="xla",
+            hosts=[HostSpec(0, list(offers)), HostSpec(1, list(offers))],
+        )
+        ctl = tr.make_controller(straggler_threshold=1.3, recover_threshold=1.2,
+                                 hold=2, recover_hold=2, cooldown_s=0.0)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        gen = batches_for(cfg, shape)
+        state, hist = tr.run(state, gen, num_steps, controller=ctl,
+                             pod_times=pod_times)
+    switches = [d.to_json() for d in ctl.switch_log()]
+    assert any(s["target"] == "localsgd" for s in switches), \
+        f"controller never initiated the straggler mitigation: {switches}"
+    return {
+        "plane": "trainer",
+        "num_steps": num_steps,
+        "final_transport": tr.transport_name,
+        "reconfig_log": tr.reconfig_log,
+        "switches": switches,
+        "decisions": [d.to_json() for d in ctl.decisions],
+        "losses": [float(m["loss"]) for m in hist],
+    }
+
+
 def main() -> None:
     for mech in ("lock", "barrier"):
         lat, switch_s = run_mechanism(mech)
         emit(f"reconfig_{mech}_fastpath_p50", pct(lat, 50) * 1e6,
              f"p95={pct(lat, 95)*1e6:.2f}us;n={len(lat)}")
         emit(f"reconfig_{mech}_switch", switch_s * 1e6, "")
+
+    results = {"kv": run_controller_kv(), "trainer": run_controller_trainer()}
+    JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
+    JSON_OUT.write_text(json.dumps(results, indent=2, default=float))
+    kv, trainer = results["kv"], results["trainer"]
+    assert kv["switches"], "controller never initiated a KV routing switch"
+    emit("reconfig_ctl_kv_switches", kv["blip_s"] * 1e6,
+         f"n={len(kv['switches'])};final={kv['final_stack'].split(' ')[0]}")
+    emit("reconfig_ctl_trainer_switches", 0.0,
+         f"n={len(trainer['switches'])};final={trainer['final_transport']}")
+    print(f"# controller scenario JSON: {JSON_OUT}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -31,8 +31,11 @@ MODULES = [
 
 def smoke() -> None:
     """Dry pass for CI (scripts/verify.sh): import every bench module (their
-    heavy work lives in main(), so imports are cheap) and run one compat
-    mesh + shard_map sanity. Fails loudly on any import or compat regression."""
+    heavy work lives in main(), so imports are cheap), run one compat
+    mesh + shard_map sanity, and run the controller-driven KV reconfigure
+    scenario headless — a regression anywhere in the close-the-loop path
+    (telemetry -> policy -> switch) fails tier-1, not just the full bench
+    sweep. Fails loudly on any import or compat regression."""
     from benchmarks import common
     from repro import compat
 
@@ -41,6 +44,15 @@ def smoke() -> None:
         importlib.import_module(mod_name)
         print(f"# {mod_name} import ok", file=sys.stderr)
     common.smoke_check()
+
+    from benchmarks.bench_reconfigure import run_controller_kv
+
+    res = run_controller_kv(fast=True)
+    assert res["switches"], "controller-initiated KV switch did not fire"
+    assert "ClientShard" in res["switches"][0]["target"], res["switches"][0]
+    print(f"smoke_controller_kv,{res['blip_s'] * 1e6:.2f},"
+          f"switches={len(res['switches'])}")
+
     print("# smoke ok on jax compat paths:", file=sys.stderr)
     for line in compat.report().splitlines():
         print(f"#   {line}", file=sys.stderr)

@@ -4,7 +4,10 @@
 #   2. tier-1 test suite      — pyproject pythonpath makes the prefix optional,
 #                               but we keep it so the script also works on
 #                               pytest < 7 installs
-#   3. benchmark smoke pass   — import + mesh/shard_map sanity for the bench tier
+#   3. benchmark smoke pass   — import + mesh/shard_map sanity for the bench
+#                               tier, plus the controller-driven reconfigure
+#                               scenario (telemetry -> policy -> switch) run
+#                               headless so the close-the-loop path is tier-1
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -8,6 +8,18 @@ Glossary (paper Table 1):
 """
 from repro.core.capability import Capability, CapabilitySet
 from repro.core.chunnel import ANY, Chunnel, Datapath, FnChunnel, WireType
+from repro.core.controller import (
+    Decision,
+    ReconfigController,
+    Rule,
+    above,
+    all_of,
+    any_of,
+    below,
+    conn_controller,
+    option_named,
+    target_label,
+)
 from repro.core.fabric import Fabric, LinkModel, ReliableChannel
 from repro.core.negotiate import (
     NegotiatedConn,
@@ -21,11 +33,15 @@ from repro.core.reconfigure import BarrierConn, ConnHandle, LockedConn
 from repro.core.rendezvous import KVStore
 from repro.core.runtime import FabricTransport, HostAgent
 from repro.core.stack import ConcreteStack, Select, Stack, StackTypeError, make_stack
+from repro.core.telemetry import ConnTelemetry, Ewma, EwmaQuantile
 
 __all__ = [
     "ANY", "Capability", "CapabilitySet", "Chunnel", "ConcreteStack", "ConnHandle",
-    "Datapath", "Fabric", "FabricTransport", "FnChunnel", "HostAgent", "KVStore",
+    "ConnTelemetry", "Datapath", "Decision", "Ewma", "EwmaQuantile", "Fabric",
+    "FabricTransport", "FnChunnel", "HostAgent", "KVStore",
     "LinkModel", "LockedConn", "BarrierConn", "NegotiatedConn", "NegotiationError",
-    "ReliableChannel", "Select", "ServerNegotiator", "Stack", "StackTypeError",
-    "WireType", "ZeroRttCache", "client_negotiate", "make_stack", "pick_compatible",
+    "ReconfigController", "ReliableChannel", "Rule", "Select", "ServerNegotiator",
+    "Stack", "StackTypeError", "WireType", "ZeroRttCache", "above", "all_of",
+    "any_of", "below", "client_negotiate", "conn_controller", "make_stack",
+    "option_named", "pick_compatible", "target_label",
 ]

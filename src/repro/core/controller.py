@@ -1,0 +1,223 @@
+"""Policy engine closing Bertha's reconfiguration loop.
+
+The paper's pitch is that the stack changes at runtime in response to "where
+applications run, the requests they serve, and the performance they need" —
+the mechanisms (negotiate, 2PC, LockedConn/BarrierConn swap) live in their
+own modules; this is the *policy* that drives them (cf. Morpheus-style
+profile-guided re-specialization, PAPERS.md).
+
+A ``ReconfigController`` maps a telemetry snapshot (``repro.core.telemetry``)
+to a target configuration — typically a ``ConcreteStack`` drawn from the
+negotiated ``Stack``'s options — and drives the switch mechanism:
+``ConnHandle.reconfigure`` for unilateral swaps,
+``HostAgent.reconfigure_multilateral`` (2PC) for multilateral ones, or a
+trainer's rendezvous transition. Two dampers prevent flapping:
+
+  hysteresis  a rule's predicate must hold for ``hold`` consecutive ticks
+              before the rule may fire
+  cooldown    after a committed switch no rule may fire for ``cooldown_s``
+
+Every tick appends a ``Decision`` (fired or not, with the snapshot that
+motivated it) to ``controller.decisions`` — the audit log the benchmarks emit
+as JSON.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+
+
+def target_label(target: Any) -> str:
+    """Stable identity of a switch target: a ConcreteStack's fingerprint, or
+    str() for plain labels (e.g. trainer transport names)."""
+    fp = getattr(target, "fingerprint", None)
+    return fp() if callable(fp) else str(target)
+
+
+def above(metric: str, threshold: float) -> Callable[[dict], bool]:
+    """Predicate: snapshot[metric] is known and exceeds threshold."""
+    return lambda s: s.get(metric) is not None and s[metric] > threshold
+
+
+def below(metric: str, threshold: float) -> Callable[[dict], bool]:
+    return lambda s: s.get(metric) is not None and s[metric] < threshold
+
+
+def all_of(*preds: Callable[[dict], bool]) -> Callable[[dict], bool]:
+    return lambda s: all(p(s) for p in preds)
+
+
+def any_of(*preds: Callable[[dict], bool]) -> Callable[[dict], bool]:
+    return lambda s: any(p(s) for p in preds)
+
+
+@dataclass
+class Rule:
+    """One policy clause: when ``when(snapshot)`` has held for ``hold``
+    consecutive ticks, propose switching to ``target``. Higher ``priority``
+    wins when several rules are armed the same tick."""
+
+    name: str
+    when: Callable[[dict], bool]
+    target: Any
+    hold: int = 2
+    priority: int = 0
+
+
+@dataclass
+class Decision:
+    """One controller tick's outcome (appended to ``controller.decisions``)."""
+
+    tick: int
+    at: float
+    rule: Optional[str]          # armed rule that was considered, if any
+    target: Optional[str]        # its target's label
+    fired: bool                  # switch() was invoked
+    committed: bool              # switch() reported success
+    reason: str                  # "switched" | "cooldown" | "refused" | "idle"
+    snapshot: dict = field(repr=False, default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "tick": self.tick, "at": self.at, "rule": self.rule,
+            "target": self.target, "fired": self.fired,
+            "committed": self.committed, "reason": self.reason,
+            "snapshot": self.snapshot,
+        }
+
+
+class ReconfigController:
+    """Telemetry in, (damped) reconfigurations out.
+
+    ``switch(target) -> bool`` performs the transition and reports whether it
+    committed; ``current() -> str`` names the active configuration (compared
+    against ``target_label`` so the controller never re-selects what is
+    already running — which is also how a "recovered → default" rule stays
+    quiet while the default is active).
+    """
+
+    def __init__(
+        self,
+        rules: Sequence[Rule],
+        switch: Callable[[Any], bool],
+        current: Callable[[], str],
+        *,
+        cooldown_s: float = 5.0,
+        now: Callable[[], float] = time.monotonic,
+        max_decisions: int = 4096,
+    ):
+        names = [r.name for r in rules]
+        if len(set(names)) != len(names):
+            # duplicate names would silently share one hysteresis streak
+            raise ValueError(f"duplicate rule names: {names}")
+        self.rules: List[Rule] = sorted(rules, key=lambda r: -r.priority)
+        self.switch = switch
+        self.current = current
+        self.cooldown_s = cooldown_s
+        self._now = now
+        self._streak: Dict[str, int] = {r.name: 0 for r in self.rules}
+        self._last_switch_t: Optional[float] = None
+        self._ticks = 0
+        # bounded: a long-lived loop ticking every step must not grow memory
+        # linearly in run length (each Decision retains a snapshot dict)
+        self.decisions: Deque[Decision] = deque(maxlen=max_decisions)
+
+    def streak(self, rule_name: str) -> int:
+        return self._streak[rule_name]
+
+    def in_cooldown(self) -> bool:
+        return (self._last_switch_t is not None
+                and self._now() - self._last_switch_t < self.cooldown_s)
+
+    def tick(self, snapshot: dict) -> Decision:
+        """Evaluate every rule against ``snapshot``; fire at most one switch.
+
+        The highest-priority armed rule CLAIMS the tick even when its target
+        is already active: a satisfied high-priority rule must suppress
+        lower-priority ones, or two persistently-armed rules with different
+        targets would take turns re-arming each other (e.g. straggler ⇒
+        localsgd and byte-budget ⇒ compressed flipping every ``hold`` ticks,
+        each flip paying a renegotiation + re-jit)."""
+        self._ticks += 1
+        now = self._now()
+        cur = self.current()
+        armed: Optional[Rule] = None
+        for r in self.rules:  # priority order; streaks advance for ALL rules
+            if r.when(snapshot):
+                self._streak[r.name] += 1
+            else:
+                self._streak[r.name] = 0
+            if armed is None and self._streak[r.name] >= r.hold:
+                armed = r
+        if armed is None or target_label(armed.target) == cur:
+            d = Decision(self._ticks, now,
+                         armed.name if armed else None,
+                         target_label(armed.target) if armed else None,
+                         False, False, "idle", snapshot)
+        elif self.in_cooldown():
+            d = Decision(self._ticks, now, armed.name, target_label(armed.target),
+                         False, False, "cooldown", snapshot)
+        else:
+            committed = bool(self.switch(armed.target))
+            if committed:
+                self._last_switch_t = now
+                for k in self._streak:  # re-arm from scratch after a transition
+                    self._streak[k] = 0
+            d = Decision(self._ticks, now, armed.name, target_label(armed.target),
+                         True, committed, "switched" if committed else "refused",
+                         snapshot)
+        self.decisions.append(d)
+        return d
+
+    def switch_log(self) -> List[Decision]:
+        return [d for d in self.decisions if d.fired and d.committed]
+
+
+# ---------------------------------------------------------------------------
+# Plumbing helpers for the common planes
+# ---------------------------------------------------------------------------
+
+
+def option_named(stack, *names: str):
+    """First of the negotiated Stack's options containing a chunnel with any
+    of the given names — how policies name targets without holding object
+    references into the stack tree."""
+    for opt in stack.options():
+        if any(c.name in names for c in opt.chunnels):
+            return opt
+    raise KeyError(f"no stack option contains a chunnel named {names}")
+
+
+def conn_controller(
+    handle,
+    stack,
+    rules: Sequence[Rule],
+    *,
+    agent=None,
+    peers: Sequence[str] = (),
+    conn_id: str = "",
+    **kw,
+) -> ReconfigController:
+    """Close the loop over a live ``ConnHandle`` whose targets come from the
+    negotiated ``Stack``'s options. Unilateral targets swap locally; when an
+    ``agent`` (plus peers/conn_id) is given, multilateral targets go through
+    ``HostAgent.reconfigure_multilateral``'s 2PC. A multilateral target
+    without an agent is refused at construction — a silent one-sided swap
+    would be exactly the endpoint divergence negotiation exists to prevent."""
+    if agent is None:
+        for r in rules:
+            m = getattr(r.target, "multilateral", None)
+            if callable(m) and m():
+                raise ValueError(
+                    f"rule {r.name!r} targets a multilateral stack; pass "
+                    f"agent/peers/conn_id so the switch runs the 2PC")
+
+    def switch(target) -> bool:
+        if agent is not None and target.multilateral():
+            return agent.reconfigure_multilateral(handle, target, list(peers), conn_id)
+        return handle.reconfigure(target)
+
+    return ReconfigController(
+        rules, switch, lambda: handle.stack.fingerprint(), **kw)

@@ -88,6 +88,12 @@ class Fabric:
             ep.inbox.put((src, msg))
 
 
+def approx_size(msg: Any) -> int:
+    """Rough wire size of a fabric message — used for accounting (fabric
+    byte counters, connection telemetry), not for framing."""
+    return _approx_size(msg)
+
+
 def _approx_size(msg: Any) -> int:
     if isinstance(msg, (bytes, bytearray)):
         return len(msg)

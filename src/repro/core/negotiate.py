@@ -9,6 +9,16 @@ load-balancer to inform backends).
 Zero-RTT: the client caches the negotiated fingerprint per (peer, offer) and
 optimistically instantiates it while the server confirms or proposes a
 replacement (QUIC-0RTT-style, §6.1).
+
+Invariants (relied on by the §7.3 load balancer and the reconfiguration
+controller):
+  * The client's offer carries the real ``ConcreteStack.fingerprint()`` of
+    each option, and the server stores the chosen one verbatim — so a 0-RTT
+    resumption of the same stack yields the SAME nonce as the original 1-RTT
+    negotiation (the nonce is a pure function of the two fingerprints).
+  * The 0-RTT branch validates the client's claimed fingerprint against the
+    server's cached value; a stale or unknown claim falls back to 1-RTT
+    instead of silently minting a nonce for a stack that was never agreed.
 """
 from __future__ import annotations
 
@@ -89,7 +99,13 @@ def client_negotiate(
             # else: fall through
 
     offer = stack.offer()
-    reply = chan.request({"type": "offer", "options": offer})
+    reply = chan.request({
+        "type": "offer",
+        "options": offer,
+        # real fingerprints, index-aligned with options: the server caches the
+        # chosen one so 0-RTT resumption reproduces the 1-RTT nonce exactly
+        "fps": [opt.fingerprint() for opt in stack.options()],
+    })
     if reply.get("type") == "reject":
         raise NegotiationError(f"server rejected: {reply.get('reason')}")
     if reply.get("type") != "accept":
@@ -115,24 +131,35 @@ class ServerNegotiator:
             if picked is None:
                 return {"type": "reject", "reason": "no compatible stack"}
             s_opt, c_idx = picked
-            # Reconstruct the client fp from its offer for 0-RTT resumption.
-            client_fp_src = repr(msg["options"][c_idx])
-            self._last[src] = client_fp_src
+            # Cache the client's REAL fingerprint (sent index-aligned with the
+            # offer) for 0-RTT resumption: the client caches
+            # chosen.fingerprint() on its side, so both ends must derive the
+            # nonce from the same string or resumption mints a different nonce
+            # than the original negotiation. repr(desc) is only a last-resort
+            # fallback for pre-fps clients (their 0-RTT will renegotiate).
+            fps = msg.get("fps") or []
+            client_fp = fps[c_idx] if c_idx < len(fps) else repr(msg["options"][c_idx])
+            self._last[src] = client_fp
             self.negotiated[src] = s_opt
             return {
                 "type": "accept",
                 "client_idx": c_idx,
                 "server_fp": s_opt.fingerprint(),
-                "nonce": _nonce(s_opt.fingerprint(), client_fp_src),
+                "nonce": _nonce(s_opt.fingerprint(), client_fp),
             }
         if t == "zero_rtt":
-            # Server re-validates that a stack compatible with the cached choice
-            # is still available (its own Select preferences may have changed).
-            for s_opt in self.stack.options():
-                if src in self.negotiated and s_opt.fingerprint() == self.negotiated[src].fingerprint():
-                    return {
-                        "type": "zero_rtt_ok",
-                        "nonce": _nonce(s_opt.fingerprint(), msg["fp"]),
-                    }
+            cached = self._last.get(src)
+            server_choice = self.negotiated.get(src)
+            # Validate the client's claim against OUR cache of what was agreed
+            # — resuming a stack we never negotiated must fall back to 1-RTT.
+            if cached is None or server_choice is None or msg.get("fp") != cached:
+                return {"type": "negotiate_failed", "proposal": self.stack.offer()[:1]}
+            # Re-validate that the previously negotiated server stack is still
+            # on offer (our own Select preferences may have changed since).
+            if self.stack.find(server_choice.fingerprint()) is not None:
+                return {
+                    "type": "zero_rtt_ok",
+                    "nonce": _nonce(server_choice.fingerprint(), cached),
+                }
             return {"type": "negotiate_failed", "proposal": self.stack.offer()[:1]}
         return {"type": "reject", "reason": f"unknown message {t}"}

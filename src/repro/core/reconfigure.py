@@ -16,6 +16,17 @@ coordination mechanisms, both implemented and microbenchmarked
 Multilateral chunnels additionally run a two-phase commit across peers while
 the switch-point is held (negotiation uses the connection, so the barrier/lock
 must protect it — §6.2).
+
+Invariants of the swap itself (relied on by the reconfiguration controller):
+  * State migration is aligned by chunnel NAME, not stack position — stacks of
+    different depth (or with reordered layers) cannot silently skip
+    ``migrate_state`` for layers a positional zip would have dropped.
+  * Once every 2PC peer has voted ready, the decision is COMMIT: delivery
+    failures in phase 2 are swallowed (presumed commit), never propagated out
+    of the switch point, so a flaky peer cannot strand the group half-committed.
+  * Every handle carries a ``ConnTelemetry`` (repro.core.telemetry); the data
+    path records op latency/bytes and the reconfig blip stats are folded into
+    each telemetry snapshot.
 """
 from __future__ import annotations
 
@@ -25,7 +36,9 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
 from repro.core.chunnel import Datapath
+from repro.core.fabric import approx_size
 from repro.core.stack import ConcreteStack
+from repro.core.telemetry import ConnTelemetry
 
 
 @dataclass
@@ -42,6 +55,8 @@ class ConnHandle:
         self.stack = stack
         self.dp: Datapath = stack.instantiate()
         self.stats = ReconfigStats()
+        self.telemetry = ConnTelemetry()
+        self.telemetry.bind_reconfig(self.stats)
 
     # -- data plane -----------------------------------------------------------
     def send(self, msgs) -> None:
@@ -49,6 +64,14 @@ class ConnHandle:
 
     def recv(self, buf, timeout=None) -> int:
         raise NotImplementedError
+
+    def _record_send(self, msgs, t0: float) -> None:
+        self.telemetry.record_send(len(msgs), sum(map(approx_size, msgs)),
+                                   time.perf_counter() - t0)
+
+    def _record_recv(self, buf, n: int) -> None:
+        if n:
+            self.telemetry.record_recv(n, sum(approx_size(m) for m in buf[:n]))
 
     # -- control plane --------------------------------------------------------
     def reconfigure(self, new_stack: ConcreteStack,
@@ -59,9 +82,18 @@ class ConnHandle:
 
     def _do_swap(self, new_stack: ConcreteStack) -> None:
         # Bertha Fig. 3: ② migrate state old -> new, ③ swap implementation.
+        # Alignment is by chunnel NAME: a positional zip silently skips
+        # migrate_state for trailing layers when the stacks differ in depth
+        # (e.g. GradCompressed error-feedback residuals dropped when switching
+        # to a shorter stack) and spuriously migrates unchanged layers that
+        # merely moved position.
+        old_by_name: dict = {}
+        for ch in self.stack.chunnels:
+            old_by_name.setdefault(ch.name, ch)
         state = {}
-        for old_ch, new_ch in zip(self.stack.chunnels, new_stack.chunnels):
-            if type(old_ch) is not type(new_ch):
+        for new_ch in new_stack.chunnels:
+            old_ch = old_by_name.get(new_ch.name)
+            if old_ch is None or type(old_ch) is not type(new_ch):
                 state.update(new_ch.migrate_state(self.dp))
         old_dp = self.dp
         self.dp = new_stack.instantiate()
@@ -79,12 +111,17 @@ class LockedConn(ConnHandle):
         self._lock = threading.Lock()
 
     def send(self, msgs):
+        msgs = msgs if isinstance(msgs, (list, tuple)) else list(msgs)
+        t0 = time.perf_counter()
         with self._lock:
             self.dp.send(msgs)
+        self._record_send(msgs, t0)
 
     def recv(self, buf, timeout=None):
         with self._lock:
-            return self.dp.recv(buf, timeout)
+            n = self.dp.recv(buf, timeout)
+        self._record_recv(buf, n)
+        return n
 
     def reconfigure(self, new_stack, coordinate=None):
         t0 = time.perf_counter()
@@ -117,11 +154,16 @@ class BarrierConn(ConnHandle):
 
     def send(self, msgs):
         self._checkpoint()
+        msgs = msgs if isinstance(msgs, (list, tuple)) else list(msgs)
+        t0 = time.perf_counter()
         self.dp.send(msgs)
+        self._record_send(msgs, t0)
 
     def recv(self, buf, timeout=None):
         self._checkpoint()
-        return self.dp.recv(buf, timeout)
+        n = self.dp.recv(buf, timeout)
+        self._record_recv(buf, n)
+        return n
 
     def reconfigure(self, new_stack, coordinate=None):
         t0 = time.perf_counter()
@@ -148,8 +190,15 @@ class BarrierConn(ConnHandle):
 def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str],
                      new_fp: str, *, timeout_s: float = 2.0) -> bool:
     """Coordinator side. chan_request(peer, msg) -> reply (reliable).
-    All peers must accept for the transition to commit; any refusal or timeout
-    aborts (a faulty peer cannot force others to switch)."""
+
+    Phase 1: all peers must accept for the transition to commit; any refusal
+    or timeout aborts (a faulty peer cannot force others to switch).
+
+    Phase 2 is presumed-commit: once every peer has voted ready the decision
+    IS commit, so delivery failures must not escape the switch point and
+    strand a mixed prepared/committed group — the notification loops swallow
+    timeouts (the ReliableChannel already retries underneath; an unreachable
+    peer stays prepared and re-syncs at its next prepare)."""
     ready = []
     for p in peers:
         try:
@@ -158,11 +207,17 @@ def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str]
             r = {"type": "reconfig_refuse"}
         if r.get("type") != "reconfig_ready":
             for q in ready:
-                chan_request(q, {"type": "reconfig_abort", "fp": new_fp})
+                try:
+                    chan_request(q, {"type": "reconfig_abort", "fp": new_fp})
+                except TimeoutError:
+                    pass  # abort is also just a notification of a made decision
             return False
         ready.append(p)
     for p in peers:
-        chan_request(p, {"type": "reconfig_commit", "fp": new_fp})
+        try:
+            chan_request(p, {"type": "reconfig_commit", "fp": new_fp})
+        except TimeoutError:
+            pass  # decision already made; see docstring
     return True
 
 

@@ -108,11 +108,13 @@ class HostAgent:
                 return {"type": "reject", "reason": "not listening"}
             return self._negotiator.handle(src, body)
         if t.startswith("reconfig_"):
-            part = self._participants.get(body.get("conn", ""))
-            if part is None and self._participants:
-                part = next(iter(self._participants.values()))
+            # Strict conn-id dispatch: an unknown id must be refused, never
+            # routed to an arbitrary participant — a reconfig_prepare/commit
+            # for conn B must not prepare or swap conn A's stack.
+            conn = body.get("conn", "")
+            part = self._participants.get(conn)
             if part is None:
-                return {"type": "reconfig_refuse"}
+                return {"type": "reconfig_refuse", "reason": f"unknown conn {conn!r}"}
             return part.handle_msg(src, body)
         h = self._handlers.get(t)
         if h is not None:

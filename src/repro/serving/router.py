@@ -10,7 +10,10 @@ Two routing chunnels over the host fabric:
                       can be re-provisioned without touching clients).
 
 The benchmark (benchmarks/bench_sharding.py ~ Fig. 6) measures p50/p95 latency
-vs offered load for both, and the reconfiguration between them mid-run.
+vs offered load for both, and the reconfiguration between them mid-run;
+``routing_stack()`` packages the two as a Select so a ReconfigController can
+switch them from live telemetry (benchmarks/bench_reconfigure.py closes that
+loop end-to-end).
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-from repro.core import Fabric, FabricTransport, LinkModel
+from repro.core import Fabric, FabricTransport, LinkModel, Select, Stack, make_stack
 from repro.core.capability import CapabilitySet
 from repro.core.chunnel import Chunnel, Datapath, WireType
 
@@ -185,6 +188,19 @@ class AddressedTransport(Chunnel):
         return DP()
 
 
+def routing_stack(ep, backends, router_addr: str = "router", *,
+                  prefer: str = "server") -> Stack:
+    """The §7.3 routing Select over the addressed transport: ServerRouter
+    (backends re-provisionable behind the router) vs ClientShard (direct to
+    the owning backend — no hop, no router queueing). ``prefer`` sets the
+    operator's default; the reconfiguration controller switches between the
+    two options at runtime from offered-load/latency telemetry."""
+    cs = ClientShardChunnel(backends=tuple(backends))
+    sr = ServerRouterChunnel(router_addr=router_addr)
+    first, second = (sr, cs) if prefer == "server" else (cs, sr)
+    return make_stack(Select(first, second), AddressedTransport(ep))
+
+
 class KVClient:
     """Issues requests through a (reconfigurable) routing stack."""
 
@@ -196,6 +212,7 @@ class KVClient:
 
     def request(self, op: str, key: str, val=None, timeout: float = 2.0):
         rid = next(self._rid)
+        tel = getattr(self.handle, "telemetry", None)
         t0 = time.perf_counter()
         self.handle.send([{"op": op, "key": key, "val": val, "rid": rid,
                            "reply_to": self.addr}])
@@ -204,5 +221,10 @@ class KVClient:
         while time.monotonic() < deadline:
             n = self.handle.recv(buf, timeout=0.05)
             if n and isinstance(buf[0], dict) and buf[0].get("rid") == rid:
-                return buf[0], time.perf_counter() - t0
+                lat = time.perf_counter() - t0
+                if tel is not None:
+                    tel.record_rtt(lat)
+                return buf[0], lat
+        if tel is not None:
+            tel.record_rtt(timeout)  # timeouts must drag p95 up, not vanish
         raise TimeoutError(f"kv {op} {key}")

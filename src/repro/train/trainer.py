@@ -19,6 +19,13 @@ Fault tolerance:
     — reconfiguration as *mitigation*, the paper's core pitch,
   * elastic restart: on membership change, re-negotiate via rendezvous, then
     restore the latest checkpoint onto the new mesh.
+
+Closed loop: the trainer feeds a ConnTelemetry (per-pod step times from the
+heartbeat plane, estimated DCN bytes per step) and ``make_controller()``
+builds a ReconfigController whose rules map that telemetry to negotiated
+transport transitions — straggler ratio ⇒ localsgd, DCN-byte budget ⇒
+compressed wire format, recovery ⇒ back to the default — with hysteresis and
+cooldown so the loop cannot flap. Pass the controller to ``run()``.
 """
 from __future__ import annotations
 
@@ -33,7 +40,9 @@ from repro.checkpoint.ckpt import Checkpointer
 from repro.comm.chunnels import StepChunnel, init_grad_states, make_transport
 from repro.configs.base import ModelConfig, ShapeConfig, ShardingConfig, TrainConfig
 from repro.core import KVStore, Stack, make_stack
+from repro.core.controller import ReconfigController, Rule, above
 from repro.core.stack import ConcreteStack
+from repro.core.telemetry import ConnTelemetry
 from repro.core import rendezvous
 from repro.models.registry import Model, build
 from repro.train import step as step_mod
@@ -80,6 +89,10 @@ class ReconfigurableTrainer:
         self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
         self.step_times: List[float] = []
         self.reconfig_log: List[dict] = []
+        self.telemetry = ConnTelemetry()
+        self._param_bytes = 4 * sum(  # f32 gradient bytes per full sync
+            int(np.prod(s.shape)) for s in jax.tree.leaves(self.model.param_shapes()))
+        self._live_state = None  # current TrainState while a controller drives run()
         self._build_step()
 
     # -- negotiation (multi-party, rendezvous §5.3) ----------------------------
@@ -142,6 +155,11 @@ class ReconfigurableTrainer:
             self.model.batch_specs(self.shape), donate=False)
         self.state_sh, _ = step_mod.shardings_for(
             self.model, self.mesh, self.sharding, self.chunnels)
+        # The next step pays (re)compilation: that blip is reconfiguration
+        # cost, not a data-plane signal — keep it out of the step-time
+        # telemetry or it swamps the straggler EWMAs (and a post-switch
+        # recompile would re-arm the very rule that caused the switch).
+        self._skip_step_telemetry = True
 
     def init_state(self, rng) -> step_mod.TrainState:
         st = step_mod.init_state(self.model, rng, self.tcfg)
@@ -154,11 +172,68 @@ class ReconfigurableTrainer:
         # place the state on the mesh with the step's shardings
         return jax.tree.map(jax.device_put, st, self.state_sh)
 
+    # -- telemetry ------------------------------------------------------------------
+    def _dcn_bytes_per_step(self) -> int:
+        """Estimated cross-pod (DCN) gradient bytes per step under the active
+        transport — the byte signal the controller budgets against. Coarse on
+        purpose: one all-reduce ~ one param-sized exchange per chip, scaled by
+        the transport's wire format / sync cadence."""
+        if "pod" not in self.mesh.axis_names or self.mesh.shape["pod"] < 2:
+            return 0
+        pb = self._param_bytes
+        name = self.transport_name
+        if name in ("compressed_int8",):
+            return pb // 4
+        if name == "hier_compressed":
+            return pb // (4 * max(self.mesh.shape.get("data", 1), 1))
+        if name == "hierarchical":
+            return pb // max(self.mesh.shape.get("data", 1), 1)
+        if name == "localsgd":
+            sync_every = next((ch.sync_every for ch in self.chunnels
+                               if hasattr(ch, "sync_every")), 4)
+            return pb // max(sync_every, 1)
+        return pb  # xla / psum / ring: full f32 gradients every step
+
+    def _record_step_telemetry(self, dt: float,
+                               pod_times: Optional[Callable[[int, float], Dict[str, float]]],
+                               step_idx: int) -> None:
+        reports = (pod_times(step_idx, dt) if pod_times is not None
+                   else {f"host{h.host_id}": dt for h in self.hosts})
+        self.telemetry.record_step(reports)
+        self.telemetry.record_wire(self._dcn_bytes_per_step())
+
+    def _controller_snapshot(self, dt: float) -> dict:
+        snap = self.telemetry.snapshot()
+        # What the DEFAULT (f32 every-step) transport would currently cost:
+        # budget/recovery rules compare against this so switching to a lighter
+        # wire format doesn't immediately un-arm the rule that caused it.
+        pod_active = "pod" in self.mesh.axis_names and self.mesh.shape["pod"] >= 2
+        snap["dcn_bytes_per_s_f32"] = (self._param_bytes / max(dt, 1e-9)
+                                       if pod_active else 0.0)
+        return snap
+
     # -- training loop --------------------------------------------------------------
     def run(self, state, batches: Callable[[int], dict], num_steps: int,
             *, ckpt_every: int = 0, straggler: Optional[StragglerPolicy] = None,
-            inject_slow: Optional[Callable[[int], float]] = None) -> tuple:
+            inject_slow: Optional[Callable[[int], float]] = None,
+            controller: Optional[ReconfigController] = None,
+            pod_times: Optional[Callable[[int, float], Dict[str, float]]] = None) -> tuple:
+        """Run ``num_steps``. ``pod_times(step, own_dt) -> {pod: dt}`` models
+        the heartbeat plane (other hosts reporting step times); ``controller``
+        (from ``make_controller``) closes the loop — it observes the telemetry
+        after every step and may commit a negotiated transport transition
+        between steps (the switch point of this single-data-thread plane)."""
         metrics_hist = []
+        try:
+            return self._run_loop(state, batches, num_steps, metrics_hist,
+                                  ckpt_every, straggler, inject_slow,
+                                  controller, pod_times)
+        finally:
+            # even on a mid-run exception, don't pin params/opt state forever
+            self._live_state = None
+
+    def _run_loop(self, state, batches, num_steps, metrics_hist, ckpt_every,
+                  straggler, inject_slow, controller, pod_times) -> tuple:
         for i in range(num_steps):
             step_idx = int(state.step)
             batch = {k: jax.numpy.asarray(v) for k, v in batches(step_idx).items()}
@@ -177,6 +252,14 @@ class ReconfigurableTrainer:
                 self.ckpt.save(step_idx + 1, state, asynchronous=True)
             if straggler is not None:
                 state = self._maybe_mitigate(state, straggler)
+            if self._skip_step_telemetry:
+                self._skip_step_telemetry = False  # compile step: blip, not signal
+            else:
+                self._record_step_telemetry(dt, pod_times, step_idx)
+                if controller is not None:
+                    self._live_state = state
+                    controller.tick(self._controller_snapshot(dt))
+                    state = self._live_state  # controller_switch may have migrated it
         if self.ckpt:
             self.ckpt.wait()
         return state, metrics_hist
@@ -198,7 +281,9 @@ class ReconfigurableTrainer:
                  "upper": "grads", "lower": "unit", "multilateral": True}]
         epoch = rendezvous.propose_transition(
             self.store, self.conn_id, "host0", new_transport, desc)
-        for h in self.hosts:  # every host votes (here: all accept if they offer it)
+        for h in self.hosts:  # peers vote their offer lists; the proposer
+            # (host0, who initiated this transition) consents by proposing —
+            # a peer that doesn't offer the target vetoes the whole switch
             ok = new_transport in h.offers or h.host_id == 0
             rendezvous.vote(self.store, self.conn_id, f"host{h.host_id}", epoch, ok)
         committed = rendezvous.try_commit(self.store, self.conn_id, epoch, timeout_s=5.0)
@@ -219,6 +304,69 @@ class ReconfigurableTrainer:
         self.reconfig_log.append({"from": old, "to": new_transport, "committed": True,
                                   "at_step": int(state.step)})
         return state
+
+    # -- closed-loop controller -------------------------------------------------------
+    def controller_switch(self, target: str) -> bool:
+        """Switch callback for a ReconfigController: rendezvous-negotiated
+        transition + state migration + re-jit, applied to the live state."""
+        assert self._live_state is not None, "controller_switch outside run()"
+        before = len(self.reconfig_log)
+        self._live_state = self.reconfigure(self._live_state, target)
+        return (len(self.reconfig_log) > before
+                and self.reconfig_log[-1]["committed"])
+
+    def make_controller(
+        self,
+        *,
+        straggler_threshold: float = 1.5,
+        recover_threshold: float = 1.15,
+        dcn_budget_bytes_per_s: Optional[float] = None,
+        mitigation: str = "localsgd",
+        budget_target: str = "compressed_int8",
+        default: Optional[str] = None,
+        hold: int = 2,
+        recover_hold: Optional[int] = None,
+        cooldown_s: float = 0.0,
+        now: Callable[[], float] = time.monotonic,
+    ) -> ReconfigController:
+        """The trainer's standard policy, ticked once per step by ``run()``:
+
+          straggler_ratio > threshold      ⇒ ``mitigation``  (sync less often)
+          f32 DCN rate    > byte budget    ⇒ ``budget_target`` (lighter wire)
+          both signals healthy             ⇒ back to ``default``
+
+        The budget/recovery rules read ``dcn_bytes_per_s_f32`` (what the
+        default transport WOULD cost right now) rather than the live byte
+        rate, so committing a lighter wire format does not instantly disarm
+        the very rule that selected it (a flap source hysteresis alone cannot
+        fix). Targets must appear in every PEER host's offers or the
+        rendezvous vote aborts the transition (the proposing host consents by
+        proposing) — policy cannot override the peers' negotiation."""
+        default = default or self.transport_name
+        budget = dcn_budget_bytes_per_s
+
+        def recovered(s: dict) -> bool:
+            if s.get("straggler_ratio", 1.0) >= recover_threshold:
+                return False
+            if budget is not None and s.get("dcn_bytes_per_s_f32", 0.0) > budget:
+                return False
+            return True
+
+        rules = [
+            Rule("straggler->mitigation", above("straggler_ratio", straggler_threshold),
+                 mitigation, hold=hold, priority=2),
+        ]
+        if budget is not None:
+            rules.append(
+                Rule("dcn-budget->compressed", above("dcn_bytes_per_s_f32", budget),
+                     budget_target, hold=hold, priority=1))
+        rules.append(
+            Rule("recovered->default", recovered, default,
+                 hold=recover_hold if recover_hold is not None else 2 * hold,
+                 priority=0))
+        return ReconfigController(
+            rules, self.controller_switch, lambda: self.transport_name,
+            cooldown_s=cooldown_s, now=now)
 
     # -- checkpoint/restart -----------------------------------------------------------
     def save(self, state, step: Optional[int] = None):

@@ -6,9 +6,12 @@ import time
 import pytest
 
 from repro.core import (
+    ANY,
     BarrierConn,
     Capability,
     CapabilitySet,
+    Chunnel,
+    Datapath,
     Fabric,
     FabricTransport,
     FnChunnel,
@@ -18,12 +21,14 @@ from repro.core import (
     LockedConn,
     NegotiationError,
     Select,
+    ServerNegotiator,
     Stack,
     StackTypeError,
     WireType,
     make_stack,
 )
 from repro.core import rendezvous
+from repro.core.reconfigure import two_phase_commit
 
 
 def T(name, upper, lower, caps=None, multilateral=False):
@@ -147,6 +152,40 @@ class TestNegotiation:
         assert c2.stack.fingerprint() == c1.stack.fingerprint()
         server.close(); client.close()
 
+    def test_zero_rtt_nonce_matches_original_negotiation(self):
+        # The nonce encodes the agreed select branches (§7.3 uses it to let
+        # backends accept a client's requests) — resuming the SAME stack via
+        # 0-RTT must therefore mint the SAME nonce as the 1-RTT negotiation.
+        fabric = Fabric()
+        server, client = _mk_pair(fabric)
+        st = make_stack(T("X", "obj", "unit", CapabilitySet.exact("x")))
+        server.listen(st)
+        c1 = client.connect("srv", st, use_zero_rtt=True)
+        c2 = client.connect("srv", st, use_zero_rtt=True)
+        assert not c1.was_zero_rtt and c2.was_zero_rtt
+        assert c2.nonce == c1.nonce
+        server.close(); client.close()
+
+    def test_zero_rtt_claim_validated_against_cache(self):
+        st = make_stack(T("X", "obj", "unit", CapabilitySet.exact("x")))
+        neg = ServerNegotiator(st)
+        # no prior negotiation with this peer: claim must be rejected
+        r = neg.handle("stranger", {"type": "zero_rtt", "fp": "anything"})
+        assert r["type"] == "negotiate_failed"
+        # negotiate, then claim a DIFFERENT fingerprint: must be rejected too
+        accept = neg.handle("cli", {
+            "type": "offer", "options": st.offer(),
+            "fps": [o.fingerprint() for o in st.options()],
+        })
+        assert accept["type"] == "accept"
+        r = neg.handle("cli", {"type": "zero_rtt", "fp": "not-what-we-agreed"})
+        assert r["type"] == "negotiate_failed"
+        # the real fingerprint resumes, and with the original nonce
+        good = neg.handle("cli", {"type": "zero_rtt",
+                                  "fp": st.preferred().fingerprint()})
+        assert good["type"] == "zero_rtt_ok"
+        assert good["nonce"] == accept["nonce"]
+
     def test_server_preference_wins(self):
         fabric = Fabric()
         server, client = _mk_pair(fabric)
@@ -215,6 +254,153 @@ class TestReconfiguration:
         handle = LockedConn(st_a.preferred())
         assert handle.reconfigure(st_b.preferred(), coordinate=lambda: False) is False
         assert handle.stack.chunnels[0].name == "A"
+
+
+class _PassDP(Datapath):
+    def __init__(self, inner):
+        self.inner = inner
+
+    def send(self, msgs):
+        if self.inner is not None:
+            self.inner.send(msgs)
+
+    def recv(self, buf, timeout=None):
+        return self.inner.recv(buf, timeout) if self.inner else 0
+
+
+class _MigCh(Chunnel):
+    """Pass-through chunnel that logs every migrate_state call."""
+
+    upper_type = ANY
+    lower_type = ANY
+
+    def __init__(self, name, log):
+        self._name = name
+        self.log = log
+
+    @property
+    def name(self):
+        return self._name
+
+    def connect_wrap(self, inner):
+        return _PassDP(inner)
+
+    def migrate_state(self, old):
+        self.log.append(self._name)
+        return {f"from_{self._name}": 1}
+
+
+class _MigChV2(_MigCh):
+    """Same name as a _MigCh, different implementation class."""
+
+
+class TestStateMigrationAlignment:
+    def test_new_trailing_layer_migrates_on_depth_mismatch(self):
+        # old [A] -> new [A, C]: a positional zip pairs only (A, A) and C
+        # never gets to extract state; name alignment must call C.
+        log = []
+        handle = LockedConn(make_stack(_MigCh("A", log)).preferred())
+        new = make_stack(_MigCh("A", log), _MigCh("C", log)).preferred()
+        log.clear()
+        assert handle.reconfigure(new)
+        assert log == ["C"]
+
+    def test_shorter_stack_changed_head_still_migrates(self):
+        # old [A, B, C] -> new [D, C]: zip pairs (A,D),(B,C) and the kept C is
+        # compared against B (spurious) while D's pairing is right by luck;
+        # name alignment: D (new) migrates, C (unchanged, just moved) does not.
+        log = []
+        handle = LockedConn(
+            make_stack(_MigCh("A", log), _MigCh("B", log), _MigCh("C", log)).preferred())
+        new = make_stack(_MigCh("D", log), _MigCh("C", log)).preferred()
+        log.clear()
+        assert handle.reconfigure(new)
+        assert log == ["D"]
+
+    def test_reordered_unchanged_layers_do_not_spuriously_migrate(self):
+        log = []
+        handle = LockedConn(make_stack(_MigCh("A", log), _MigCh("C", log)).preferred())
+        new = make_stack(_MigCh("C", log), _MigCh("A", log)).preferred()
+        log.clear()
+        assert handle.reconfigure(new)
+        assert log == []
+
+    def test_same_name_different_impl_migrates(self):
+        # relative-compatibility: a different implementation reusing the name
+        # still needs the state translated.
+        log = []
+        handle = LockedConn(make_stack(_MigCh("M", log)).preferred())
+        new = make_stack(_MigChV2("M", log)).preferred()
+        log.clear()
+        assert handle.reconfigure(new)
+        assert log == ["M"]
+
+
+class TestTwoPhaseCommitAbortSafety:
+    def _chan(self, sent, *, commit_timeout_for=(), refuse=(), abort_timeout_for=()):
+        def chan_request(p, m):
+            t = m["type"]
+            sent.append((p, t))
+            if t == "reconfig_prepare":
+                if p in refuse:
+                    return {"type": "reconfig_refuse"}
+                return {"type": "reconfig_ready"}
+            if t == "reconfig_commit" and p in commit_timeout_for:
+                raise TimeoutError(p)
+            if t == "reconfig_abort" and p in abort_timeout_for:
+                raise TimeoutError(p)
+            return {"type": "reconfig_done"}
+        return chan_request
+
+    def test_commit_phase_timeout_does_not_escape(self):
+        # Once all peers are prepared the decision is commit: a delivery
+        # failure to p2 must neither raise nor stop p3 from being notified.
+        sent = []
+        ok = two_phase_commit(self._chan(sent, commit_timeout_for={"p2"}),
+                              ["p1", "p2", "p3"], "fp-new")
+        assert ok is True
+        commits = [p for p, t in sent if t == "reconfig_commit"]
+        assert commits == ["p1", "p2", "p3"]
+
+    def test_refusal_aborts_and_abort_timeout_swallowed(self):
+        sent = []
+        ok = two_phase_commit(
+            self._chan(sent, refuse={"p3"}, abort_timeout_for={"p1"}),
+            ["p1", "p2", "p3"], "fp-new")
+        assert ok is False
+        aborts = [p for p, t in sent if t == "reconfig_abort"]
+        assert aborts == ["p1", "p2"]  # p1's timeout didn't stop p2's abort
+        assert not [p for p, t in sent if t == "reconfig_commit"]
+
+
+class TestDispatchConnIsolation:
+    def test_unknown_conn_refused_and_correct_conn_swaps(self):
+        fabric = Fabric()
+        srv = HostAgent(fabric, "iso-srv")
+        cli = HostAgent(fabric, "iso-cli")
+        stack = make_stack(Select(T("A", "obj", "unit"), T("B", "obj", "unit")))
+        handle = LockedConn(stack.options()[0])
+        srv.register_participant("connA", handle, stack.find)
+        fp_b = stack.options()[1].fingerprint()
+        # a prepare/commit for an unknown conn must be refused, not routed to
+        # an arbitrary participant (it would swap conn A's stack)
+        r = cli.request("iso-srv", {"type": "reconfig_prepare", "fp": fp_b,
+                                    "conn": "connB"})
+        assert r["type"] == "reconfig_refuse"
+        r = cli.request("iso-srv", {"type": "reconfig_commit", "fp": fp_b,
+                                    "conn": "connB"})
+        assert r["type"] == "reconfig_refuse"
+        assert handle.stack.fingerprint() == stack.options()[0].fingerprint()
+        assert handle.stats.switches == 0
+        # the registered conn id still works end-to-end
+        r = cli.request("iso-srv", {"type": "reconfig_prepare", "fp": fp_b,
+                                    "conn": "connA"})
+        assert r["type"] == "reconfig_ready"
+        r = cli.request("iso-srv", {"type": "reconfig_commit", "fp": fp_b,
+                                    "conn": "connA"})
+        assert r["type"] == "reconfig_done"
+        assert handle.stack.fingerprint() == fp_b
+        srv.close(); cli.close()
 
 
 class TestRendezvous:
