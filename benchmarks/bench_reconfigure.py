@@ -18,6 +18,11 @@ ReconfigController observes live telemetry and initiates the switch itself —
 
 Both scenarios record telemetry before/after each switch and the switch blip
 in benchmarks/out/controller_scenarios.json.
+
+run_scored_negotiation compares the multi-objective scorer against the
+historical first-compatible rule over one offer under different live
+workloads (chatty vs bulk), emitting benchmarks/out/scored_negotiation.json —
+the cost-model-drives-the-choice claim (Morpheus, PAPERS.md) end-to-end.
 """
 from __future__ import annotations
 
@@ -30,22 +35,26 @@ import time
 
 from benchmarks.common import emit, pct
 from repro.core import (
+    BYTES_FIRST,
     BarrierConn,
+    CapabilitySet,
+    CostModel,
     Fabric,
     FabricTransport,
     FnChunnel,
+    LATENCY_FIRST,
     LinkModel,
     LockedConn,
-    Rule,
-    above,
-    below,
+    Select,
     conn_controller,
     make_stack,
-    option_named,
+    pick_compatible,
+    score_stack,
 )
 from repro.serving.router import KVBackend, KVClient, Router, routing_stack
 
 JSON_OUT = pathlib.Path(__file__).parent / "out" / "controller_scenarios.json"
+SCORED_OUT = pathlib.Path(__file__).parent / "out" / "scored_negotiation.json"
 
 
 def _stack(fabric, tag):
@@ -85,8 +94,65 @@ def run_mechanism(mechanism: str, n_threads: int = 3, duration_s: float = 1.2,
 
 
 # ---------------------------------------------------------------------------
-# Controller-driven KV serving scenario (§7.3 / Fig. 6, closed loop)
+# Scored vs first-compatible negotiation (multi-objective pick_compatible)
 # ---------------------------------------------------------------------------
+
+
+def run_scored_negotiation() -> dict:
+    """One server offer, three capability-compatible implementations with
+    different cost profiles; negotiate under two live workloads:
+
+      chatty   high op rate, few bytes  -> latency term dominates
+      bulk     few ops, high byte rate  -> DCN-byte term dominates
+
+    First-compatible always returns the server-preferred Legacy option; the
+    scorer picks FastPath for the chatty workload and ZipWire for bulk."""
+    caps = CapabilitySet.exact("wire:obj")
+
+    def impl(name, lat_s, byte_ratio):
+        return FnChunnel(fn_name=name, caps=caps,
+                         cost=CostModel(op_latency_s=lat_s,
+                                        dcn_bytes_per_byte=byte_ratio))
+
+    legacy = impl("Legacy", 5e-3, 1.0)     # server-preferred, good at nothing
+    zipw = impl("ZipWire", 3e-3, 0.25)     # compresses the wire
+    fast = impl("FastPath", 4e-4, 1.0)     # lowest per-op latency
+    server = make_stack(Select(legacy, zipw, fast))
+    client = make_stack(Select(legacy, zipw, fast))
+    offer = client.offer()
+
+    workloads = {
+        "chatty": ({"ops_per_s": 2000.0, "bytes_per_s": 5e4}, LATENCY_FIRST),
+        "bulk": ({"ops_per_s": 5.0, "bytes_per_s": 5e7}, BYTES_FIRST),
+    }
+    out = {}
+    for label, (snap, objective) in workloads.items():
+        first_opt, _ = pick_compatible(server, offer, mode="first")
+        scored_opt, _ = pick_compatible(server, offer, snapshot=snap,
+                                        objective=objective)
+        out[label] = {
+            "snapshot": snap,
+            "objective": objective.name,
+            "first_compatible": first_opt.chunnels[0].name,
+            "scored": scored_opt.chunnels[0].name,
+            "utilities": {
+                opt.chunnels[0].name: score_stack(opt, objective, snap)
+                for opt in server.options()
+            },
+        }
+    return out
+
+
+def emit_scored_negotiation() -> dict:
+    """Run the scored-vs-first comparison, write the JSON artifact, and check
+    the expected winners (shared by main() and run.py --smoke)."""
+    scored = run_scored_negotiation()
+    SCORED_OUT.parent.mkdir(parents=True, exist_ok=True)
+    SCORED_OUT.write_text(json.dumps(scored, indent=2, default=float))
+    assert all(r["first_compatible"] == "Legacy" for r in scored.values()), scored
+    assert scored["chatty"]["scored"] == "FastPath", scored["chatty"]
+    assert scored["bulk"]["scored"] == "ZipWire", scored["bulk"]
+    return scored
 
 
 def run_controller_kv(*, fast: bool = False) -> dict:
@@ -116,14 +182,14 @@ def run_controller_kv(*, fast: bool = False) -> dict:
                           router_addr="ctl-router", prefer="server")
     handle = LockedConn(stack.preferred())  # ServerRouter: the low-load default
     client = KVClient(fabric, ep, handle)
+    # policy comes from the plugin registry (registered by the serving plane),
+    # not a hand-assembled Rule list — the §7.3 point that applications ship
+    # policies without editing the runtime
+    policy = "kv_load_adaptive"
     ctl = conn_controller(
         handle, stack,
-        [
-            Rule("high-load->client-shard", above("ops_per_s", 150.0),
-                 option_named(stack, "ClientShard"), hold=2, priority=1),
-            Rule("low-load->server-router", below("ops_per_s", 120.0),
-                 option_named(stack, "ServerRouter"), hold=2, priority=0),
-        ],
+        policy=policy,
+        policy_params={"high_ops_per_s": 150.0, "low_ops_per_s": 120.0, "hold": 2},
         cooldown_s=0.2,
     )
 
@@ -175,6 +241,7 @@ def run_controller_kv(*, fast: bool = False) -> dict:
 
     return {
         "plane": "kv",
+        "policy": policy,
         "phases": phases,
         "switches": [d.to_json() for d in ctl.switch_log()],
         "decisions": [d.to_json() for d in ctl.decisions],
@@ -250,13 +317,20 @@ def main() -> None:
              f"p95={pct(lat, 95)*1e6:.2f}us;n={len(lat)}")
         emit(f"reconfig_{mech}_switch", switch_s * 1e6, "")
 
+    scored = emit_scored_negotiation()
+    for label, row in scored.items():
+        emit(f"negotiate_scored_{label}", 0.0,
+             f"first={row['first_compatible']};scored={row['scored']}")
+    print(f"# scored negotiation JSON: {SCORED_OUT}", file=sys.stderr, flush=True)
+
     results = {"kv": run_controller_kv(), "trainer": run_controller_trainer()}
     JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
     JSON_OUT.write_text(json.dumps(results, indent=2, default=float))
     kv, trainer = results["kv"], results["trainer"]
     assert kv["switches"], "controller never initiated a KV routing switch"
     emit("reconfig_ctl_kv_switches", kv["blip_s"] * 1e6,
-         f"n={len(kv['switches'])};final={kv['final_stack'].split(' ')[0]}")
+         f"n={len(kv['switches'])};policy={kv['policy']};"
+         f"final={kv['final_stack'].split(' ')[0]}")
     emit("reconfig_ctl_trainer_switches", 0.0,
          f"n={len(trainer['switches'])};final={trainer['final_transport']}")
     print(f"# controller scenario JSON: {JSON_OUT}", file=sys.stderr, flush=True)

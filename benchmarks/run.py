@@ -32,10 +32,12 @@ MODULES = [
 def smoke() -> None:
     """Dry pass for CI (scripts/verify.sh): import every bench module (their
     heavy work lives in main(), so imports are cheap), run one compat
-    mesh + shard_map sanity, and run the controller-driven KV reconfigure
-    scenario headless — a regression anywhere in the close-the-loop path
-    (telemetry -> policy -> switch) fails tier-1, not just the full bench
-    sweep. Fails loudly on any import or compat regression."""
+    mesh + shard_map sanity, run the scored-vs-first-compatible negotiation
+    comparison, and run the controller-driven KV reconfigure scenario
+    headless through the policy registry — a regression anywhere in the
+    close-the-loop path (telemetry -> scorer -> policy -> switch) fails
+    tier-1, not just the full bench sweep. Fails loudly on any import or
+    compat regression."""
     from benchmarks import common
     from repro import compat
 
@@ -45,13 +47,18 @@ def smoke() -> None:
         print(f"# {mod_name} import ok", file=sys.stderr)
     common.smoke_check()
 
-    from benchmarks.bench_reconfigure import run_controller_kv
+    from benchmarks.bench_reconfigure import emit_scored_negotiation, run_controller_kv
+
+    scored = emit_scored_negotiation()
+    print("smoke_scored_negotiation,0.00,"
+          f"chatty={scored['chatty']['scored']};bulk={scored['bulk']['scored']}")
 
     res = run_controller_kv(fast=True)
     assert res["switches"], "controller-initiated KV switch did not fire"
+    assert res["policy"] == "kv_load_adaptive", res.get("policy")  # via registry
     assert "ClientShard" in res["switches"][0]["target"], res["switches"][0]
     print(f"smoke_controller_kv,{res['blip_s'] * 1e6:.2f},"
-          f"switches={len(res['switches'])}")
+          f"switches={len(res['switches'])};policy={res['policy']}")
 
     print("# smoke ok on jax compat paths:", file=sys.stderr)
     for line in compat.report().splitlines():

@@ -24,9 +24,16 @@ import jax.numpy as jnp
 from repro.comm import collectives, compress
 from repro.core.capability import CapabilitySet
 from repro.core.chunnel import Chunnel, Datapath, WireType
+from repro.core.cost import CostModel
 
 GRADS_F32 = WireType.of("grads", dtype="f32")
 UNIT = WireType.of("unit")
+
+
+#: every step-transport switch re-jits the step function — that blip dominates
+#: the mechanism cost and is identical across transports, so the scorer's
+#: switch-aversion for this plane is uniform (see repro.core.cost)
+REJIT_BLIP_S = 2.0
 
 
 class StepChunnel(Chunnel):
@@ -43,6 +50,17 @@ class StepChunnel(Chunnel):
 
     #: mesh axes this chunnel needs manual (shard_map) control over
     manual_axes: tuple = ()
+
+    #: nominal fast-axis width assumed by cost models that divide DCN bytes by
+    #: |fast| — static annotations cannot see the mesh, so hierarchy credit is
+    #: taken at this width (coarse on purpose; the scorer only needs ordering)
+    NOMINAL_FAST = 4
+
+    #: False for transports that trade gradient freshness for communication
+    #: (localsgd-style): their cost models honestly win the comm-cost contest,
+    #: so scoring policies must not treat them as steady-state candidates —
+    #: only an explicit mitigation rule may select them
+    exact_sync = True
 
     def init_state(self, grads_shape):
         return ()
@@ -105,6 +123,12 @@ class GradXla(StepChunnel):
         return CapabilitySet.exact("wire:f32").union_(
             CapabilitySet.compose("transport:xla"))
 
+    def cost_model(self):
+        # baseline: one fused f32 AR per step, schedule fully fused by XLA
+        return CostModel(op_latency_s=3e-3,
+                         dcn_bytes_per_byte=collectives.dcn_bytes_factor("xla"),
+                         switch_blip_s=REJIT_BLIP_S)
+
     def apply(self, tree, state, ctx):
         return tree, state  # XLA inserts the collectives itself
 
@@ -125,6 +149,11 @@ class GradPsum(StepChunnel):
     def capabilities(self):
         return CapabilitySet.exact("wire:f32", f"transport:psum@{self.axis}")
 
+    def cost_model(self):
+        return CostModel(op_latency_s=3e-3,
+                         dcn_bytes_per_byte=collectives.dcn_bytes_factor("psum"),
+                         switch_blip_s=REJIT_BLIP_S)
+
     def apply(self, tree, state, ctx):
         return collectives.pmean_tree(tree, self.axis), state
 
@@ -144,6 +173,13 @@ class GradRing(StepChunnel):
 
     def capabilities(self):
         return CapabilitySet.exact("wire:f32", f"transport:ring@{self.axis}")
+
+    def cost_model(self):
+        # same DCN bytes as psum, but 2(n-1) dependent permute steps instead
+        # of one fused AR: higher per-step latency on real links
+        return CostModel(op_latency_s=4e-3,
+                         dcn_bytes_per_byte=collectives.dcn_bytes_factor("ring"),
+                         switch_blip_s=REJIT_BLIP_S)
 
     def apply(self, tree, state, ctx):
         n = ctx["mesh"].shape[self.axis]
@@ -180,6 +216,13 @@ class GradHierarchical(StepChunnel):
             "wire:f32", f"transport:hier@{self.fast_axis}+{self.slow_axis}",
             f"layout:noshard@{self.fast_axis}")
 
+    def cost_model(self):
+        return CostModel(
+            op_latency_s=2e-3,
+            dcn_bytes_per_byte=collectives.dcn_bytes_factor(
+                "hierarchical", n_fast=self.NOMINAL_FAST),
+            switch_blip_s=REJIT_BLIP_S)
+
     def apply(self, tree, state, ctx):
         n = ctx["mesh"].shape[self.slow_axis] * ctx["mesh"].shape[self.fast_axis]
         out = collectives.hierarchical_tree(tree, self.fast_axis, self.slow_axis)
@@ -206,6 +249,14 @@ class GradCompressed(StepChunnel):
     def capabilities(self):
         return CapabilitySet.exact(f"wire:int8-blockq{self.block}",
                                    f"transport:cag@{self.axis}")
+
+    def cost_model(self):
+        # 4x fewer DCN bytes, but quantize/dequantize compute on the fast path
+        return CostModel(
+            op_latency_s=2.5e-3,
+            dcn_bytes_per_byte=collectives.dcn_bytes_factor(
+                "compressed", wire_ratio=compress.int8_wire_ratio(self.block)),
+            switch_blip_s=REJIT_BLIP_S)
 
     def init_state(self, grads_shape):
         if not self.error_feedback:
@@ -249,6 +300,14 @@ class GradHierCompressed(StepChunnel):
             f"layout:noshard@{self.fast_axis}",
         )
 
+    def cost_model(self):
+        return CostModel(
+            op_latency_s=2.2e-3,
+            dcn_bytes_per_byte=collectives.dcn_bytes_factor(
+                "hier_compressed", n_fast=self.NOMINAL_FAST,
+                wire_ratio=compress.int8_wire_ratio(self.block)),
+            switch_blip_s=REJIT_BLIP_S)
+
     def apply(self, tree, state, ctx):
         n = ctx["mesh"].shape[self.slow_axis] * ctx["mesh"].shape[self.fast_axis]
         out = collectives.hierarchical_compressed_tree(
@@ -265,6 +324,7 @@ class GradLocalSGD(StepChunnel):
 
     axis: str = "pod"
     sync_every: int = 4
+    exact_sync = False  # H-1 of H steps run on stale pod-local gradients
 
     def __post_init__(self):
         self.manual_axes = (self.axis,)
@@ -275,6 +335,19 @@ class GradLocalSGD(StepChunnel):
 
     def capabilities(self):
         return CapabilitySet.exact("wire:f32", f"transport:localsgd{self.sync_every}@{self.axis}")
+
+    def cost_model(self):
+        # Honest about COMMUNICATION cost only: skipping the AR on H-1 of H
+        # steps genuinely is the cheapest transport on both scored dimensions.
+        # The price — gradient staleness / statistical efficiency — is outside
+        # the model, so scoring policies must treat localsgd as a straggler
+        # MITIGATION, not a steady-state candidate (trainer_default excludes
+        # the mitigation target from its scored byte-budget argmax).
+        return CostModel(
+            op_latency_s=1e-3,
+            dcn_bytes_per_byte=collectives.dcn_bytes_factor(
+                "localsgd", sync_every=self.sync_every),
+            switch_blip_s=REJIT_BLIP_S)
 
     def init_state(self, grads_shape):
         return {"step": jnp.zeros((), jnp.int32)}

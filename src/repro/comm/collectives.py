@@ -28,6 +28,29 @@ from repro import compat
 from repro.comm import compress
 
 
+def dcn_bytes_factor(schedule: str, *, n_fast: int = 1, sync_every: int = 1,
+                     wire_ratio: float = 1.0) -> float:
+    """Per-payload-byte DCN traffic of each schedule, relative to one fused
+    f32 all-reduce — the ``dcn_bytes_per_byte`` cost-model term behind the
+    gradient-transport Select:
+
+      psum/ring/xla   1.0   (full f32 gradients cross the slow tier)
+      hierarchical    1/n_fast  (each chip moves only its RS shard over DCN)
+      compressed      wire_ratio (see ``compress.int8_wire_ratio``)
+      hier_compressed wire_ratio/n_fast
+      localsgd        1/sync_every (full sync every H steps, amortized)
+    """
+    if schedule in ("hierarchical",):
+        return 1.0 / max(n_fast, 1)
+    if schedule in ("compressed", "compressed_int8", "cag"):
+        return wire_ratio
+    if schedule in ("hier_compressed", "hiercag"):
+        return wire_ratio / max(n_fast, 1)
+    if schedule == "localsgd":
+        return 1.0 / max(sync_every, 1)
+    return 1.0  # xla / psum / ring
+
+
 def _flatten(tree) -> Tuple[jnp.ndarray, list, list]:
     leaves = jax.tree.leaves(tree)
     shapes = [l.shape for l in leaves]

@@ -13,6 +13,13 @@ import jax
 import jax.numpy as jnp
 
 
+def int8_wire_ratio(block: int = 256) -> float:
+    """Wire bytes per f32 payload byte of the int8 block format: one int8 per
+    4-byte float plus one f32 scale per block — the ``dcn_bytes_per_byte``
+    cost-model term of every chunnel speaking this format."""
+    return (1.0 + 4.0 / block) / 4.0
+
+
 def _pad_to_block(x: jnp.ndarray, block: int) -> jnp.ndarray:
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % block

@@ -10,15 +10,33 @@ from repro.core.capability import Capability, CapabilitySet
 from repro.core.chunnel import ANY, Chunnel, Datapath, FnChunnel, WireType
 from repro.core.controller import (
     Decision,
+    PolicyContext,
     ReconfigController,
     Rule,
     above,
     all_of,
     any_of,
+    available_policies,
     below,
     conn_controller,
+    get_policy,
     option_named,
+    policy_rules,
+    register_policy,
+    stack_candidates,
     target_label,
+)
+from repro.core.cost import (
+    BYTES_FIRST,
+    DEFAULT_OBJECTIVE,
+    LATENCY_FIRST,
+    Candidate,
+    CostModel,
+    Objective,
+    ScoredTarget,
+    score_stack,
+    stack_cost,
+    utility,
 )
 from repro.core.fabric import Fabric, LinkModel, ReliableChannel
 from repro.core.negotiate import (
@@ -36,12 +54,16 @@ from repro.core.stack import ConcreteStack, Select, Stack, StackTypeError, make_
 from repro.core.telemetry import ConnTelemetry, Ewma, EwmaQuantile
 
 __all__ = [
-    "ANY", "Capability", "CapabilitySet", "Chunnel", "ConcreteStack", "ConnHandle",
-    "ConnTelemetry", "Datapath", "Decision", "Ewma", "EwmaQuantile", "Fabric",
-    "FabricTransport", "FnChunnel", "HostAgent", "KVStore",
-    "LinkModel", "LockedConn", "BarrierConn", "NegotiatedConn", "NegotiationError",
-    "ReconfigController", "ReliableChannel", "Rule", "Select", "ServerNegotiator",
+    "ANY", "BYTES_FIRST", "Capability", "CapabilitySet", "Candidate", "Chunnel",
+    "ConcreteStack", "ConnHandle", "ConnTelemetry", "CostModel",
+    "DEFAULT_OBJECTIVE", "Datapath", "Decision", "Ewma", "EwmaQuantile",
+    "Fabric", "FabricTransport", "FnChunnel", "HostAgent", "KVStore",
+    "LATENCY_FIRST", "LinkModel", "LockedConn", "BarrierConn", "NegotiatedConn",
+    "NegotiationError", "Objective", "PolicyContext", "ReconfigController",
+    "ReliableChannel", "Rule", "ScoredTarget", "Select", "ServerNegotiator",
     "Stack", "StackTypeError", "WireType", "ZeroRttCache", "above", "all_of",
-    "any_of", "below", "client_negotiate", "conn_controller", "make_stack",
-    "option_named", "pick_compatible", "target_label",
+    "any_of", "available_policies", "below", "client_negotiate",
+    "conn_controller", "get_policy", "make_stack", "option_named",
+    "pick_compatible", "policy_rules", "register_policy", "score_stack",
+    "stack_candidates", "stack_cost", "target_label", "utility",
 ]

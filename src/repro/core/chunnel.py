@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 from typing import Any, Iterable, Optional, Sequence
 
 from repro.core.capability import CapabilitySet
+from repro.core.cost import NEUTRAL, CostModel
 
 
 @dataclass(frozen=True)
@@ -83,6 +84,13 @@ class Chunnel(abc.ABC):
         """Relative-compatibility labels (Bertha §5.2); opaque to the runtime."""
         return CapabilitySet.exact(self.name)
 
+    def cost_model(self) -> CostModel:
+        """Static cost annotations scored by ``repro.core.cost`` during
+        negotiation and controller ticks. The neutral default keeps
+        unannotated chunnels out of the objective (scoring then falls back to
+        preference order)."""
+        return NEUTRAL
+
     @abc.abstractmethod
     def connect_wrap(self, inner: Optional[Datapath]) -> Datapath: ...
 
@@ -110,6 +118,7 @@ class FnChunnel(Chunnel):
     lower: WireType = ANY
     caps: Optional[CapabilitySet] = None
     multilateral_: bool = False
+    cost: Optional[CostModel] = None
 
     def __post_init__(self):
         self.upper_type = self.upper
@@ -122,6 +131,9 @@ class FnChunnel(Chunnel):
 
     def capabilities(self) -> CapabilitySet:
         return self.caps if self.caps is not None else CapabilitySet.exact(self.name)
+
+    def cost_model(self) -> CostModel:
+        return self.cost if self.cost is not None else NEUTRAL
 
     def connect_wrap(self, inner: Optional[Datapath]) -> Datapath:
         return _FnDatapath(self, inner)

@@ -20,6 +20,30 @@ trainer's rendezvous transition. Two dampers prevent flapping:
 Every tick appends a ``Decision`` (fired or not, with the snapshot that
 motivated it) to ``controller.decisions`` — the audit log the benchmarks emit
 as JSON.
+
+Rule targets come in two kinds: a *concrete* target (a ConcreteStack, or a
+plain label like a trainer transport name) fires as written, while a
+``ScoredTarget`` (repro.core.cost) names an OBJECTIVE — it is resolved each
+tick to the argmax-utility candidate of the negotiated option set under the
+live snapshot, so rules express "cheapest", "lowest latency", "fewest DCN
+bytes" instead of hard-coding one stack per rule.
+
+The *policy plugin registry* lets applications ship whole rule-sets without
+editing core:
+
+    @register_policy("carbon_aware")
+    def carbon_aware(ctx: PolicyContext) -> list[Rule]:
+        return [Rule("carbon", above("gco2_per_kwh", ctx.params["cap"]),
+                     ScoredTarget(ctx.candidates, BYTES_FIRST))]
+
+    ctl = conn_controller(handle, stack, policy="carbon_aware",
+                          policy_params={"cap": 400.0})
+
+Built-ins: ``latency_slo`` (SLO breach ⇒ lowest-latency option),
+``byte_budget`` (byte-rate cap ⇒ fewest-wire-bytes option), ``cost_aware``
+(track the utility argmax continuously). The trainer registers
+``trainer_default`` and the KV serving plane ``kv_load_adaptive`` the same
+way — through the public decorator, not by editing this module.
 """
 from __future__ import annotations
 
@@ -28,12 +52,16 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
-
-def target_label(target: Any) -> str:
-    """Stable identity of a switch target: a ConcreteStack's fingerprint, or
-    str() for plain labels (e.g. trainer transport names)."""
-    fp = getattr(target, "fingerprint", None)
-    return fp() if callable(fp) else str(target)
+from repro.core.cost import (
+    BYTES_FIRST,
+    DEFAULT_OBJECTIVE,
+    LATENCY_FIRST,
+    Candidate,
+    ScoredTarget,
+    resolve_target,
+    stack_cost,
+    target_label,
+)
 
 
 def above(metric: str, threshold: float) -> Callable[[dict], bool]:
@@ -91,11 +119,27 @@ class Decision:
 class ReconfigController:
     """Telemetry in, (damped) reconfigurations out.
 
-    ``switch(target) -> bool`` performs the transition and reports whether it
-    committed; ``current() -> str`` names the active configuration (compared
-    against ``target_label`` so the controller never re-selects what is
-    already running — which is also how a "recovered → default" rule stays
-    quiet while the default is active).
+    Args:
+        rules: the policy, a sequence of ``Rule`` (names must be unique —
+            build them by hand or through the policy registry via
+            ``get_policy``/``conn_controller(policy=...)``).
+        switch: ``switch(target) -> bool`` performs the transition and
+            reports whether it committed. Dynamic (``ScoredTarget``) rule
+            targets are resolved before this is called, so ``switch`` always
+            receives a concrete target.
+        current: ``current() -> str`` names the active configuration
+            (compared against ``target_label`` so the controller never
+            re-selects what is already running — which is also how a
+            "recovered → default" rule stays quiet while the default is
+            active).
+        cooldown_s: minimum wall-clock gap after a committed switch before
+            any rule may fire again.
+        now: clock override for deterministic tests.
+        max_decisions: bound on the retained ``decisions`` audit log.
+
+    Call ``tick(snapshot)`` once per control interval with a telemetry
+    snapshot (``ConnTelemetry.snapshot()``); read ``decisions`` /
+    ``switch_log()`` for the audit trail.
     """
 
     def __init__(
@@ -139,7 +183,12 @@ class ReconfigController:
         lower-priority ones, or two persistently-armed rules with different
         targets would take turns re-arming each other (e.g. straggler ⇒
         localsgd and byte-budget ⇒ compressed flipping every ``hold`` ticks,
-        each flip paying a renegotiation + re-jit)."""
+        each flip paying a renegotiation + re-jit).
+
+        Dynamic targets (``ScoredTarget``) are resolved HERE, against this
+        tick's snapshot and the active configuration — the Decision records
+        the resolved target's label, and ``switch`` receives the resolved
+        target."""
         self._ticks += 1
         now = self._now()
         cur = self.current()
@@ -151,21 +200,24 @@ class ReconfigController:
                 self._streak[r.name] = 0
             if armed is None and self._streak[r.name] >= r.hold:
                 armed = r
-        if armed is None or target_label(armed.target) == cur:
+        target = label = None
+        if armed is not None:
+            target = resolve_target(armed.target, snapshot, cur)
+            label = target_label(target)
+        if armed is None or label == cur:
             d = Decision(self._ticks, now,
-                         armed.name if armed else None,
-                         target_label(armed.target) if armed else None,
+                         armed.name if armed else None, label,
                          False, False, "idle", snapshot)
         elif self.in_cooldown():
-            d = Decision(self._ticks, now, armed.name, target_label(armed.target),
+            d = Decision(self._ticks, now, armed.name, label,
                          False, False, "cooldown", snapshot)
         else:
-            committed = bool(self.switch(armed.target))
+            committed = bool(self.switch(target))
             if committed:
                 self._last_switch_t = now
                 for k in self._streak:  # re-arm from scratch after a transition
                     self._streak[k] = 0
-            d = Decision(self._ticks, now, armed.name, target_label(armed.target),
+            d = Decision(self._ticks, now, armed.name, label,
                          True, committed, "switched" if committed else "refused",
                          snapshot)
         self.decisions.append(d)
@@ -173,6 +225,146 @@ class ReconfigController:
 
     def switch_log(self) -> List[Decision]:
         return [d for d in self.decisions if d.fired and d.committed]
+
+
+# ---------------------------------------------------------------------------
+# Policy plugin registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PolicyContext:
+    """What a registered policy factory gets to work with.
+
+    candidates  the negotiated option set as scoreable ``Candidate``s (target
+                + cost model + label) — ScoredTargets draw from these
+    default     the configuration to fall back to when a recovery clause
+                applies (None disables recovery rules in the built-ins)
+    params      free-form knobs forwarded from the caller
+                (``conn_controller(policy_params=...)`` or
+                ``make_controller(policy_params=...)``)
+    """
+
+    candidates: List[Candidate] = field(default_factory=list)
+    default: Any = None
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    def param(self, name: str, default: Any = None) -> Any:
+        return self.params.get(name, default)
+
+    def candidate_named(self, *names: str) -> Candidate:
+        """First candidate whose label matches, or whose target (a
+        ConcreteStack) contains a chunnel with any of the given names."""
+        for c in self.candidates:
+            if c.label in names:
+                return c
+            chs = getattr(c.target, "chunnels", None)
+            if chs is not None and any(ch.name in names for ch in chs):
+                return c
+        raise KeyError(f"no candidate named {names}; have "
+                       f"{[c.label for c in self.candidates]}")
+
+
+#: name -> factory(PolicyContext) -> Sequence[Rule]
+_POLICIES: Dict[str, Callable[[PolicyContext], Sequence[Rule]]] = {}
+
+
+def register_policy(name: str, *, override: bool = False) -> Callable:
+    """Class/function decorator registering a policy factory under ``name``.
+
+    A policy factory takes a ``PolicyContext`` and returns the ``Rule`` list
+    a controller should run — this is how applications ship cost-aware /
+    SLO-aware / carbon-aware policies without editing core (ROADMAP).
+    Re-registering an existing name raises unless ``override=True``.
+    """
+    def deco(fn: Callable[[PolicyContext], Sequence[Rule]]):
+        if name in _POLICIES and not override:
+            raise ValueError(
+                f"policy {name!r} already registered "
+                f"(pass override=True to replace it)")
+        _POLICIES[name] = fn
+        fn.policy_name = name
+        return fn
+
+    return deco
+
+
+def get_policy(name: str) -> Callable[[PolicyContext], Sequence[Rule]]:
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; registered: "
+                       f"{available_policies()}") from None
+
+
+def available_policies() -> List[str]:
+    return sorted(_POLICIES)
+
+
+def policy_rules(name: str, ctx: PolicyContext) -> List[Rule]:
+    """Instantiate a registered policy's rules against a context."""
+    return list(get_policy(name)(ctx))
+
+
+# -- built-in policies: rules name objectives, not targets -------------------
+
+
+@register_policy("cost_aware")
+def cost_aware_policy(ctx: PolicyContext) -> List[Rule]:
+    """Track the utility argmax of the whole candidate set continuously.
+
+    params: objective (default balanced), margin (score-space hysteresis,
+    default 0.1), hold, priority. The rule is always armed; damping comes
+    from hold + margin + the blip term charged to non-current candidates.
+    """
+    tgt = ScoredTarget(ctx.candidates,
+                       ctx.param("objective", DEFAULT_OBJECTIVE),
+                       margin=ctx.param("margin", 0.1))
+    return [Rule("cost_aware", lambda s: True, tgt,
+                 hold=ctx.param("hold", 2), priority=ctx.param("priority", 0))]
+
+
+@register_policy("latency_slo")
+def latency_slo_policy(ctx: PolicyContext) -> List[Rule]:
+    """SLO breach ⇒ the lowest-latency compatible option.
+
+    params: slo_s (required), metric (default ``rtt_p95_s``), hold,
+    recover_s (default slo_s/2), recover_hold, priority. With a
+    ``ctx.default`` a recovery rule drops back once the metric clears
+    recover_s."""
+    slo = ctx.params["slo_s"]
+    metric = ctx.param("metric", "rtt_p95_s")
+    hold = ctx.param("hold", 2)
+    rules = [Rule("latency_slo:breach", above(metric, slo),
+                  ScoredTarget(ctx.candidates, LATENCY_FIRST),
+                  hold=hold, priority=ctx.param("priority", 2))]
+    if ctx.default is not None:
+        rules.append(Rule("latency_slo:recovered",
+                          below(metric, ctx.param("recover_s", slo / 2)),
+                          ctx.default,
+                          hold=ctx.param("recover_hold", 2 * hold), priority=0))
+    return rules
+
+
+@register_policy("byte_budget")
+def byte_budget_policy(ctx: PolicyContext) -> List[Rule]:
+    """Byte-rate over budget ⇒ the fewest-wire-bytes option.
+
+    params: bytes_per_s (required), metric (default ``bytes_per_s``), hold,
+    recover_frac (default 0.7: recovery arms below recover_frac * budget),
+    recover_hold, priority."""
+    budget = ctx.params["bytes_per_s"]
+    metric = ctx.param("metric", "bytes_per_s")
+    hold = ctx.param("hold", 2)
+    rules = [Rule("byte_budget:over", above(metric, budget),
+                  ScoredTarget(ctx.candidates, BYTES_FIRST),
+                  hold=hold, priority=ctx.param("priority", 1))]
+    if ctx.default is not None:
+        rules.append(Rule("byte_budget:recovered",
+                          below(metric, ctx.param("recover_frac", 0.7) * budget),
+                          ctx.default,
+                          hold=ctx.param("recover_hold", 2 * hold), priority=0))
+    return rules
 
 
 # ---------------------------------------------------------------------------
@@ -190,22 +382,45 @@ def option_named(stack, *names: str):
     raise KeyError(f"no stack option contains a chunnel named {names}")
 
 
+def stack_candidates(stack) -> List[Candidate]:
+    """The negotiated ``Stack``'s options as scoreable candidates (targets
+    are ConcreteStacks, labels their fingerprints, costs the folded chunnel
+    cost models)."""
+    return [Candidate(opt, stack_cost(opt)) for opt in stack.options()]
+
+
 def conn_controller(
     handle,
     stack,
-    rules: Sequence[Rule],
+    rules: Optional[Sequence[Rule]] = None,
     *,
+    policy: Optional[str] = None,
+    policy_params: Optional[dict] = None,
+    default=None,
     agent=None,
     peers: Sequence[str] = (),
     conn_id: str = "",
     **kw,
 ) -> ReconfigController:
     """Close the loop over a live ``ConnHandle`` whose targets come from the
-    negotiated ``Stack``'s options. Unilateral targets swap locally; when an
-    ``agent`` (plus peers/conn_id) is given, multilateral targets go through
+    negotiated ``Stack``'s options.
+
+    Pass EITHER an explicit ``rules`` list OR a registered ``policy`` name
+    (with ``policy_params`` / ``default``) — the policy factory then receives
+    the stack's options as scoreable candidates, so its rules can name
+    objectives instead of concrete stacks.
+
+    Unilateral targets swap locally; when an ``agent`` (plus peers/conn_id)
+    is given, multilateral targets go through
     ``HostAgent.reconfigure_multilateral``'s 2PC. A multilateral target
     without an agent is refused at construction — a silent one-sided swap
     would be exactly the endpoint divergence negotiation exists to prevent."""
+    if (rules is None) == (policy is None):
+        raise ValueError("pass exactly one of rules= or policy=")
+    if policy is not None:
+        ctx = PolicyContext(candidates=stack_candidates(stack),
+                            default=default, params=dict(policy_params or {}))
+        rules = policy_rules(policy, ctx)
     if agent is None:
         for r in rules:
             m = getattr(r.target, "multilateral", None)

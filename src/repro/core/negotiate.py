@@ -1,8 +1,12 @@
 """Point-to-point negotiation (Bertha §5.1–§5.2) + zero-RTT resumption (§6.1).
 
 Client sends its Chunnel-stack options over the base connection; the server
-picks a compatible concrete stack (capability comparison, §5.2) honoring its
-own preference order; both sides then instantiate via recursive connect_wrap.
+filters to capability-compatible concrete stacks (§5.2 comparison) and — when
+it has scoring evidence (an Objective or live telemetry; ``ServerNegotiator``
+gates on this, bare servers keep preference order) — scores them with the
+multi-objective cost model (``repro.core.cost``) and picks the argmax,
+falling back to its own preference order on ties; both sides then instantiate
+via recursive connect_wrap.
 A returned nonce encodes the chosen select branches (used e.g. by the §7.3
 load-balancer to inform backends).
 
@@ -27,6 +31,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 from repro.core.capability import CapabilitySet
+from repro.core.cost import DEFAULT_OBJECTIVE, Objective, score_stack
 from repro.core.fabric import ReliableChannel
 from repro.core.stack import ConcreteStack, Stack, offered_capabilities
 
@@ -39,17 +44,55 @@ def _nonce(server_fp: str, client_fp: str) -> str:
     return hashlib.sha256(f"{server_fp}||{client_fp}".encode()).hexdigest()[:16]
 
 
-def pick_compatible(server_stack: Stack, client_offer: list) -> Optional[Tuple[ConcreteStack, int]]:
-    """Server side of §5.2: first server option (server preference) compatible
-    with a client option (client preference as tiebreak). Returns
-    (server_choice, client_option_index) or None."""
+def compatible_pairs(server_stack: Stack, client_offer: list) -> list:
+    """All (server_option, client_option_index) pairs that pass the §5.2
+    capability comparison, in server preference order; each server option is
+    paired with the first (most-preferred) compatible client option."""
     client_caps = offered_capabilities(client_offer)
+    out = []
     for s_opt in server_stack.options():
         s_caps = s_opt.capabilities()
         for idx, c_caps in enumerate(client_caps):
             if s_caps.compatible_with(c_caps):
-                return s_opt, idx
-    return None
+                out.append((s_opt, idx))
+                break
+    return out
+
+
+def pick_compatible(
+    server_stack: Stack,
+    client_offer: list,
+    *,
+    snapshot: Optional[dict] = None,
+    objective: Optional[Objective] = None,
+    mode: str = "scored",
+) -> Optional[Tuple[ConcreteStack, int]]:
+    """Server side of §5.2, multi-objective: among ALL capability-compatible
+    (server option, client option) pairs, pick the server option whose folded
+    cost model (repro.core.cost) maximizes ``utility`` under ``objective`` and
+    the live telemetry ``snapshot``.
+
+    Ties (including the common all-neutral-cost-model case) break toward
+    server preference order, with client preference as the per-option
+    tiebreak — so unannotated stacks negotiate exactly as the historical
+    first-compatible rule did. ``mode="first"`` forces that legacy behavior
+    (kept for the scored-vs-first comparison in bench_reconfigure).
+
+    Returns (server_choice, client_option_index) or None when no pair is
+    compatible.
+    """
+    pairs = compatible_pairs(server_stack, client_offer)
+    if not pairs:
+        return None
+    if mode == "first":
+        return pairs[0]
+    obj = objective or DEFAULT_OBJECTIVE
+    best, best_u = None, float("-inf")
+    for s_opt, idx in pairs:  # strict > keeps preference order on ties
+        u = score_stack(s_opt, obj, snapshot)
+        if u > best_u:
+            best, best_u = (s_opt, idx), u
+    return best
 
 
 @dataclass
@@ -117,17 +160,43 @@ def client_negotiate(
 
 
 class ServerNegotiator:
-    """Server-side handler; plug into a HostAgent's message loop."""
+    """Server-side handler; plug into a HostAgent's message loop.
 
-    def __init__(self, stack: Stack):
+    ``objective`` sets the scoring weights ``pick_compatible`` uses over the
+    compatible option set; ``telemetry`` (a ConnTelemetry) feeds the live
+    workload rates into the score (read non-destructively — the negotiator
+    must not consume another consumer's snapshot window).
+
+    Scoring is EVIDENCE-GATED: with neither an objective nor telemetry
+    configured, offers resolve by preference order (``mode="first"``). A bare
+    server must not let static sub-millisecond annotations override the
+    operator's declared Select order — e.g. ``routing_stack(prefer="server")``
+    deliberately defaults to the slower-but-reprovisionable ServerRouter at
+    idle, and only the load-adaptive policy (live telemetry) should move off
+    it."""
+
+    def __init__(self, stack: Stack, *, objective: Optional[Objective] = None,
+                 telemetry: Optional[object] = None):
         self.stack = stack
+        self.objective = objective
+        self.telemetry = telemetry
         self._last: Dict[str, str] = {}  # peer -> negotiated client fp (for 0-RTT)
         self.negotiated: Dict[str, ConcreteStack] = {}  # peer -> server stack
+
+    def _snapshot(self) -> Optional[dict]:
+        if self.telemetry is None:
+            return None
+        return self.telemetry.snapshot(reset_window=False)
 
     def handle(self, src: str, msg: dict) -> dict:
         t = msg.get("type")
         if t == "offer":
-            picked = pick_compatible(self.stack, msg["options"])
+            snap = self._snapshot()
+            mode = ("scored" if (self.objective is not None or snap is not None)
+                    else "first")
+            picked = pick_compatible(self.stack, msg["options"],
+                                     snapshot=snap, objective=self.objective,
+                                     mode=mode)
             if picked is None:
                 return {"type": "reject", "reason": "no compatible stack"}
             s_opt, c_idx = picked

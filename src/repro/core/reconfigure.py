@@ -24,6 +24,11 @@ Invariants of the swap itself (relied on by the reconfiguration controller):
   * Once every 2PC peer has voted ready, the decision is COMMIT: delivery
     failures in phase 2 are swallowed (presumed commit), never propagated out
     of the switch point, so a flaky peer cannot strand the group half-committed.
+    A peer that missed the commit notification does not wait for its next
+    prepare: it issues an *epoch query* back to the coordinator
+    (``ReconfigParticipant.needs_resync`` / ``apply_state``, pumped by the
+    HostAgent loop) and applies the committed stack — or clears its prepared
+    state if the proposal turned out aborted.
   * Every handle carries a ``ConnTelemetry`` (repro.core.telemetry); the data
     path records op latency/bytes and the reconfig blip stats are folded into
     each telemetry snapshot.
@@ -76,8 +81,27 @@ class ConnHandle:
     # -- control plane --------------------------------------------------------
     def reconfigure(self, new_stack: ConcreteStack,
                     coordinate: Optional[Callable[[], bool]] = None) -> bool:
-        """Switch to ``new_stack``. ``coordinate`` runs *inside* the switch
-        point (for multilateral 2PC); returning False aborts the switch."""
+        """Switch the live connection to ``new_stack`` (Bertha §4.2/Fig. 3).
+
+        Acquires the mechanism's switch point (mutex for ``LockedConn``,
+        stop-the-world barrier for ``BarrierConn``), then — with no thread on
+        the old datapath — migrates transferable chunnel state (aligned by
+        chunnel NAME), instantiates the new stack, and swaps it in.
+
+        Args:
+            new_stack: the fully-resolved ``ConcreteStack`` to switch to,
+                typically one of the negotiated Stack's options.
+            coordinate: optional callback run *inside* the switch point; used
+                by ``HostAgent.reconfigure_multilateral`` to run the 2PC while
+                the connection is quiesced (§6.2 — negotiation uses the
+                connection, so the lock/barrier must protect it). Returning
+                False aborts the switch with the old stack intact.
+
+        Returns:
+            True if the swap committed; False if ``coordinate`` aborted it.
+            The switch blip is recorded in ``stats.last_switch_s`` and folded
+            into every telemetry snapshot.
+        """
         raise NotImplementedError
 
     def _do_swap(self, new_stack: ConcreteStack) -> None:
@@ -188,7 +212,9 @@ class BarrierConn(ConnHandle):
 
 
 def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str],
-                     new_fp: str, *, timeout_s: float = 2.0) -> bool:
+                     new_fp: str, *, timeout_s: float = 2.0,
+                     epoch: Optional[int] = None,
+                     on_decide: Optional[Callable[[], None]] = None) -> bool:
     """Coordinator side. chan_request(peer, msg) -> reply (reliable).
 
     Phase 1: all peers must accept for the transition to commit; any refusal
@@ -197,8 +223,20 @@ def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str]
     Phase 2 is presumed-commit: once every peer has voted ready the decision
     IS commit, so delivery failures must not escape the switch point and
     strand a mixed prepared/committed group — the notification loops swallow
-    timeouts (the ReliableChannel already retries underneath; an unreachable
-    peer stays prepared and re-syncs at its next prepare)."""
+    timeouts (the ReliableChannel already retries underneath; a peer that
+    stays prepared resyncs eagerly via the epoch query, see
+    ``ReconfigParticipant``). ``epoch`` (the coordinator's post-commit switch
+    count) is piggybacked on the commit so peers can order it against later
+    queries.
+
+    ``on_decide`` fires exactly at the commit point — after the last ready
+    vote, BEFORE any phase-2 notification. The coordinator uses it to record
+    the decided epoch so that an epoch query arriving while notifications are
+    still draining (they can block for seconds on an unreachable peer) is
+    answered with the COMMIT decision, not the not-yet-applied local state —
+    otherwise a merely-delayed peer would mistake the in-flight commit for an
+    abort, clear its prepared state, and refuse the real commit when it
+    lands."""
     ready = []
     for p in peers:
         try:
@@ -213,21 +251,51 @@ def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str]
                     pass  # abort is also just a notification of a made decision
             return False
         ready.append(p)
+    if on_decide is not None:
+        on_decide()
+    commit = {"type": "reconfig_commit", "fp": new_fp}
+    if epoch is not None:
+        commit["epoch"] = epoch
     for p in peers:
         try:
-            chan_request(p, {"type": "reconfig_commit", "fp": new_fp})
+            chan_request(p, commit)
         except TimeoutError:
             pass  # decision already made; see docstring
     return True
 
 
 class ReconfigParticipant:
-    """Peer side of the 2PC; wire into the host agent's message loop."""
+    """Peer side of the 2PC; wire into the host agent's message loop.
 
-    def __init__(self, handle: ConnHandle, resolve: Callable[[str], Optional[ConcreteStack]]):
+    2PC here is presumed-commit: once every peer voted ready the decision IS
+    commit, and phase-2 notifications are best-effort. A peer that misses the
+    commit (or abort) would historically stay prepared until its next
+    prepare; instead, after ``resync_after_s`` of being prepared it asks the
+    coordinator for the connection's current epoch + active fingerprint
+    (``needs_resync`` names whom to ask; the owning ``HostAgent`` sends the
+    ``reconfig_query`` and feeds the reply to ``apply_state``).
+
+    ``epoch`` is the coordinator's switch counter: a reply with a NEWER epoch
+    than we last acted on means a decision was made without us — we adopt the
+    committed stack if it resolves; either way the stale prepared state is
+    cleared (an equal epoch means the proposal aborted).
+    """
+
+    def __init__(self, handle: ConnHandle,
+                 resolve: Callable[[str], Optional[ConcreteStack]],
+                 *, resync_after_s: float = 1.0,
+                 now: Callable[[], float] = time.monotonic):
         self.handle = handle
         self.resolve = resolve  # fp -> ConcreteStack we could switch to
+        self.resync_after_s = resync_after_s
+        self.epoch = 0  # last coordinator epoch we have acted on
+        self._now = now
         self._prepared: Optional[str] = None
+        self._prepared_src: Optional[str] = None
+        self._prepared_at: Optional[float] = None
+
+    def _clear_prepared(self) -> None:
+        self._prepared = self._prepared_src = self._prepared_at = None
 
     def handle_msg(self, src: str, msg: dict) -> dict:
         t = msg.get("type")
@@ -236,13 +304,63 @@ class ReconfigParticipant:
             if st is None:
                 return {"type": "reconfig_refuse"}
             self._prepared = msg["fp"]
+            self._prepared_src = src
+            self._prepared_at = self._now()
             return {"type": "reconfig_ready"}
         if t == "reconfig_commit" and self._prepared == msg["fp"]:
             st = self.resolve(msg["fp"])
             self.handle.reconfigure(st)
-            self._prepared = None
+            self.epoch = int(msg.get("epoch") or self.epoch + 1)
+            self._clear_prepared()
             return {"type": "reconfig_done"}
         if t == "reconfig_abort":
-            self._prepared = None
+            self._clear_prepared()
             return {"type": "reconfig_aborted"}
         return {"type": "reconfig_refuse"}
+
+    # -- prepared-peer resync (epoch query) -----------------------------------
+    def needs_resync(self, now: Optional[float] = None) -> Optional[str]:
+        """Address of the coordinator to query, when this peer has been
+        sitting prepared longer than ``resync_after_s`` (i.e. the phase-2
+        notification is presumed lost); None otherwise."""
+        if self._prepared is None or self._prepared_src is None:
+            return None
+        now = self._now() if now is None else now
+        if now - self._prepared_at < self.resync_after_s:
+            return None
+        return self._prepared_src
+
+    def defer_resync(self) -> None:
+        """Push the next resync attempt out by a full window (called when a
+        query itself timed out — don't hot-loop on an unreachable peer)."""
+        if self._prepared_at is not None:
+            self._prepared_at = self._now()
+
+    def apply_state(self, state: dict) -> bool:
+        """Fold a ``reconfig_state`` query reply in; returns True if a missed
+        commit was applied.
+
+        A newer coordinator epoch with a resolvable fingerprint different
+        from our active stack means we missed a commit: adopt it. A
+        ``pending`` reply means the 2PC is still collecting votes — nothing
+        is decided, so we stay prepared and re-query next window. Anything
+        else (same epoch ⇒ the proposal aborted; ``reconfig_refuse`` ⇒ the
+        coordinator no longer knows the connection) just clears the stale
+        prepared state — the documented §4.2 failure semantics, now reached
+        eagerly instead of at the next prepare."""
+        if state.get("type") != "reconfig_state":
+            self._clear_prepared()
+            return False
+        if state.get("pending"):
+            self.defer_resync()  # decision in flight: wait, don't conclude
+            return False
+        fp = state.get("fp")
+        epoch = int(state.get("epoch") or 0)
+        applied = False
+        if epoch > self.epoch and fp:
+            st = self.resolve(fp)
+            if st is not None and self.handle.stack.fingerprint() != fp:
+                applied = bool(self.handle.reconfigure(st))
+            self.epoch = epoch
+        self._clear_prepared()
+        return applied

@@ -161,15 +161,34 @@ class ConnTelemetry:
         base = statistics.median(rest)
         return slowest / base if base > 0 else 1.0
 
-    def snapshot(self) -> dict:
+    def snapshot(self, *, reset_window: bool = True) -> dict:
+        """One consistent-enough view of every signal, as a plain dict — the
+        input to ``ReconfigController.tick`` and the scoring functions in
+        ``repro.core.cost``.
+
+        Keys (all part of the policy API): totals (``ops``, ``steps``,
+        ``msgs_out``/``msgs_in``, ``bytes_out``/``bytes_in``, ``wire_bytes``),
+        windowed rates (``ops_per_s``, ``bytes_per_s`` — measured since the
+        previous window reset), latency estimates (``op_mean_s``,
+        ``op_p50_s``/``op_p95_s``, ``rtt_p50_s``/``rtt_p95_s``; None until
+        fed), the step plane (``pods``, ``step_time_s``,
+        ``straggler_ratio``), and the folded reconfig stats (``switches``,
+        ``last_switch_s``, ``total_blocked_s``).
+
+        ``reset_window=True`` (the controller's once-per-tick call) starts a
+        new rate window; exactly ONE consumer may do that. Everyone else —
+        e.g. a ServerNegotiator scoring an offer mid-window — must pass
+        ``reset_window=False`` to peek without disturbing the rates.
+        """
         now = self._now()
         dt = max(now - self._win_t, 1e-9)
         total_bytes = self.bytes_out + self.wire_bytes
         ops_per_s = (self.ops - self._win_ops) / dt
         bytes_per_s = (total_bytes - self._win_bytes) / dt
-        self._win_t = now
-        self._win_ops = self.ops
-        self._win_bytes = total_bytes
+        if reset_window:
+            self._win_t = now
+            self._win_ops = self.ops
+            self._win_bytes = total_bytes
         rs = self._reconfig_stats
         pods = self.pod_step_times()
         return {

@@ -27,6 +27,8 @@ from typing import Any, Dict, List, Optional
 from repro.core import Fabric, FabricTransport, LinkModel, Select, Stack, make_stack
 from repro.core.capability import CapabilitySet
 from repro.core.chunnel import Chunnel, Datapath, WireType
+from repro.core.controller import PolicyContext, Rule, above, below, register_policy
+from repro.core.cost import CostModel
 
 KV_REQ = WireType.of("kvreq")
 
@@ -111,6 +113,10 @@ class ClientShardChunnel(Chunnel):
     def capabilities(self):
         return CapabilitySet.compose("route:client-shard")
 
+    def cost_model(self):
+        # direct to the owning backend: no extra hop, no router queueing
+        return CostModel(op_latency_s=1.6e-3, switch_blip_s=1e-4)
+
     def connect_wrap(self, inner):
         return _RoutedDP(self, inner, lambda m: self.backends[
             shard_of(m["key"], len(self.backends))])
@@ -128,6 +134,10 @@ class ServerRouterChunnel(Chunnel):
 
     def capabilities(self):
         return CapabilitySet.compose("route:server")
+
+    def cost_model(self):
+        # one extra hop + router queueing, but backends re-provision freely
+        return CostModel(op_latency_s=2.4e-3, switch_blip_s=1e-4)
 
     def connect_wrap(self, inner):
         return _RoutedDP(self, inner, lambda m: self.router_addr)
@@ -186,6 +196,26 @@ class AddressedTransport(Chunnel):
                 return n
 
         return DP()
+
+
+@register_policy("kv_load_adaptive")
+def kv_load_adaptive_policy(ctx: PolicyContext) -> List[Rule]:
+    """The §7.3 load-balancing policy, shipped through the plugin registry:
+    offered load above ``high_ops_per_s`` moves the routing Select to the
+    direct ClientShard option (no router hop/queueing under load); load
+    draining below ``low_ops_per_s`` moves back to ServerRouter (backends
+    re-provisionable behind the router). Keep the two thresholds apart — the
+    gap is the hysteresis band."""
+    p = ctx.params
+    high = p.get("high_ops_per_s", 150.0)
+    low = p.get("low_ops_per_s", 120.0)
+    hold = p.get("hold", 2)
+    return [
+        Rule("high-load->client-shard", above("ops_per_s", high),
+             ctx.candidate_named("ClientShard").target, hold=hold, priority=1),
+        Rule("low-load->server-router", below("ops_per_s", low),
+             ctx.candidate_named("ServerRouter").target, hold=hold, priority=0),
+    ]
 
 
 def routing_stack(ep, backends, router_addr: str = "router", *,

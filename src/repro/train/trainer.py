@@ -22,10 +22,12 @@ Fault tolerance:
 
 Closed loop: the trainer feeds a ConnTelemetry (per-pod step times from the
 heartbeat plane, estimated DCN bytes per step) and ``make_controller()``
-builds a ReconfigController whose rules map that telemetry to negotiated
-transport transitions — straggler ratio ⇒ localsgd, DCN-byte budget ⇒
-compressed wire format, recovery ⇒ back to the default — with hysteresis and
-cooldown so the loop cannot flap. Pass the controller to ``run()``.
+builds a ReconfigController from a REGISTERED policy (default
+``trainer_default``: straggler ratio ⇒ localsgd, DCN-byte budget ⇒ lighter
+wire format, recovery ⇒ back to the default — with hysteresis and cooldown so
+the loop cannot flap). The negotiated transport option set is exposed as
+scoreable candidates (``transport_candidates``) so policies can name
+objectives instead of transports. Pass the controller to ``run()``.
 """
 from __future__ import annotations
 
@@ -37,10 +39,18 @@ import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import Checkpointer
-from repro.comm.chunnels import StepChunnel, init_grad_states, make_transport
+from repro.comm.chunnels import TRANSPORTS, StepChunnel, init_grad_states, make_transport
 from repro.configs.base import ModelConfig, ShapeConfig, ShardingConfig, TrainConfig
 from repro.core import KVStore, Stack, make_stack
-from repro.core.controller import ReconfigController, Rule, above
+from repro.core.controller import (
+    PolicyContext,
+    ReconfigController,
+    Rule,
+    above,
+    policy_rules,
+    register_policy,
+)
+from repro.core.cost import BYTES_FIRST, Candidate, CostModel, ScoredTarget, chunnel_cost
 from repro.core.stack import ConcreteStack
 from repro.core.telemetry import ConnTelemetry
 from repro.core import rendezvous
@@ -59,6 +69,64 @@ class StragglerPolicy:
     window: int = 16
     slow_factor: float = 1.5
     fallback: str = "compressed_int8"  # negotiated transition target
+
+
+@register_policy("trainer_default")
+def trainer_default_policy(ctx: PolicyContext) -> List[Rule]:
+    """The trainer's standard closed-loop policy, shipped through the plugin
+    registry (applications register policies; core never hard-codes them):
+
+      straggler_ratio > threshold   ⇒ ``mitigation`` (sync less often)
+      f32 DCN rate    > byte budget ⇒ lighter wire format — an explicit
+                                      ``budget_target``, or (when None) the
+                                      fewest-DCN-bytes option scored over the
+                                      negotiated transport candidates
+      both signals healthy          ⇒ back to ``ctx.default``
+
+    The budget/recovery rules read ``dcn_bytes_per_s_f32`` (what the DEFAULT
+    transport WOULD cost right now) rather than the live byte rate, so
+    committing a lighter wire format does not instantly disarm the very rule
+    that selected it (a flap source hysteresis alone cannot fix).
+    """
+    p = ctx.params
+    straggler_threshold = p.get("straggler_threshold", 1.5)
+    recover_threshold = p.get("recover_threshold", 1.15)
+    budget = p.get("dcn_budget_bytes_per_s")
+    mitigation = p.get("mitigation", "localsgd")
+    budget_target = p.get("budget_target", "compressed_int8")
+    hold = p.get("hold", 2)
+    recover_hold = p.get("recover_hold")
+    default = ctx.default
+
+    def recovered(s: dict) -> bool:
+        if s.get("straggler_ratio", 1.0) >= recover_threshold:
+            return False
+        if budget is not None and s.get("dcn_bytes_per_s_f32", 0.0) > budget:
+            return False
+        return True
+
+    rules = [
+        Rule("straggler->mitigation", above("straggler_ratio", straggler_threshold),
+             mitigation, hold=hold, priority=2),
+    ]
+    if budget is not None:
+        if budget_target is not None:
+            tgt = budget_target
+        else:
+            # scored argmin-DCN-bytes — but never the mitigation transport:
+            # cost models only cover communication cost, and localsgd-style
+            # mitigations win that contest by changing training semantics
+            # (gradient staleness), which only the straggler rule may buy
+            sync = [c for c in ctx.candidates if c.label != mitigation]
+            tgt = ScoredTarget(sync or ctx.candidates, BYTES_FIRST)
+        rules.append(
+            Rule("dcn-budget->compressed", above("dcn_bytes_per_s_f32", budget),
+                 tgt, hold=hold, priority=1))
+    rules.append(
+        Rule("recovered->default", recovered, default,
+             hold=recover_hold if recover_hold is not None else 2 * hold,
+             priority=0))
+    return rules
 
 
 class ReconfigurableTrainer:
@@ -315,55 +383,75 @@ class ReconfigurableTrainer:
         return (len(self.reconfig_log) > before
                 and self.reconfig_log[-1]["committed"])
 
+    def transport_candidates(self, *, include_mitigations: bool = False) -> List[Candidate]:
+        """The negotiated transport option set as scoreable candidates: every
+        transport ALL hosts offer (host0's preference order), each annotated
+        with its chunnel's cost model so ScoredTargets can rank them. Targets
+        stay the transport *names* — ``controller_switch`` turns the chosen
+        name into a rendezvous-negotiated transition.
+
+        Transports that trade gradient freshness for communication (chunnel
+        ``exact_sync = False``, e.g. localsgd) are EXCLUDED by default: their
+        cost models honestly win the comm-cost contest, so any scoring policy
+        (``cost_aware``, a scored byte budget) would adopt them steady-state
+        and silently change training semantics. Mitigation rules name them
+        directly by label instead; pass ``include_mitigations=True`` only if
+        the policy knowingly accepts staleness."""
+        common = [t for t in self.hosts[0].offers
+                  if all(t in h.offers for h in self.hosts)]
+        out = []
+        for t in common:
+            try:
+                ch = TRANSPORTS[t]()
+            except (KeyError, TypeError):
+                out.append(Candidate(t, CostModel(), t))
+                continue
+            if not include_mitigations and not getattr(ch, "exact_sync", True):
+                continue
+            out.append(Candidate(t, chunnel_cost(ch), t))
+        return out
+
     def make_controller(
         self,
         *,
+        policy: str = "trainer_default",
+        policy_params: Optional[dict] = None,
         straggler_threshold: float = 1.5,
         recover_threshold: float = 1.15,
         dcn_budget_bytes_per_s: Optional[float] = None,
         mitigation: str = "localsgd",
-        budget_target: str = "compressed_int8",
+        budget_target: Optional[str] = "compressed_int8",
         default: Optional[str] = None,
         hold: int = 2,
         recover_hold: Optional[int] = None,
         cooldown_s: float = 0.0,
         now: Callable[[], float] = time.monotonic,
     ) -> ReconfigController:
-        """The trainer's standard policy, ticked once per step by ``run()``:
+        """Build the controller ``run()`` ticks once per step, by
+        instantiating a REGISTERED policy against this trainer's negotiated
+        option set (see ``trainer_default_policy`` for the standard rules;
+        pass ``policy=`` to run any other registered policy, e.g.
+        ``cost_aware`` with ``policy_params={"objective": ...}``).
 
-          straggler_ratio > threshold      ⇒ ``mitigation``  (sync less often)
-          f32 DCN rate    > byte budget    ⇒ ``budget_target`` (lighter wire)
-          both signals healthy             ⇒ back to ``default``
-
-        The budget/recovery rules read ``dcn_bytes_per_s_f32`` (what the
-        default transport WOULD cost right now) rather than the live byte
-        rate, so committing a lighter wire format does not instantly disarm
-        the very rule that selected it (a flap source hysteresis alone cannot
-        fix). Targets must appear in every PEER host's offers or the
-        rendezvous vote aborts the transition (the proposing host consents by
-        proposing) — policy cannot override the peers' negotiation."""
-        default = default or self.transport_name
-        budget = dcn_budget_bytes_per_s
-
-        def recovered(s: dict) -> bool:
-            if s.get("straggler_ratio", 1.0) >= recover_threshold:
-                return False
-            if budget is not None and s.get("dcn_bytes_per_s_f32", 0.0) > budget:
-                return False
-            return True
-
-        rules = [
-            Rule("straggler->mitigation", above("straggler_ratio", straggler_threshold),
-                 mitigation, hold=hold, priority=2),
-        ]
-        if budget is not None:
-            rules.append(
-                Rule("dcn-budget->compressed", above("dcn_bytes_per_s_f32", budget),
-                     budget_target, hold=hold, priority=1))
-        rules.append(
-            Rule("recovered->default", recovered, default,
-                 hold=recover_hold if recover_hold is not None else 2 * hold,
-                 priority=0))
+        The keyword knobs feed the policy's params (``policy_params`` wins on
+        conflict). Whatever target a rule resolves to must appear in every
+        PEER host's offers or the rendezvous vote aborts the transition (the
+        proposing host consents by proposing) — policy cannot override the
+        peers' negotiation."""
+        params = {
+            "straggler_threshold": straggler_threshold,
+            "recover_threshold": recover_threshold,
+            "dcn_budget_bytes_per_s": dcn_budget_bytes_per_s,
+            "mitigation": mitigation,
+            "budget_target": budget_target,
+            "hold": hold,
+            "recover_hold": recover_hold,
+        }
+        params.update(policy_params or {})
+        ctx = PolicyContext(candidates=self.transport_candidates(),
+                            default=default or self.transport_name,
+                            params=params)
+        rules = policy_rules(policy, ctx)
         return ReconfigController(
             rules, self.controller_switch, lambda: self.transport_name,
             cooldown_s=cooldown_s, now=now)

@@ -28,7 +28,7 @@ from repro.core import (
     make_stack,
     option_named,
 )
-from repro.core.reconfigure import ReconfigStats
+from repro.core.reconfigure import ReconfigParticipant, ReconfigStats
 
 
 class FakeClock:
@@ -270,6 +270,149 @@ class TestConnControllerIntegration:
             conn_controller(
                 handle, stack,
                 [Rule("go", above("ops", -1.0), option_named(stack, "B"), hold=1)])
+
+
+class TestPreparedPeerResync:
+    """A 2PC peer that misses the commit notification must resync eagerly via
+    the epoch query instead of waiting for its next prepare (presumed-commit
+    fix, ROADMAP)."""
+
+    def _stack(self):
+        caps = CapabilitySet.exact("x")
+        return make_stack(Select(T("A", caps=caps, multilateral=True),
+                                 T("B", caps=caps, multilateral=True)))
+
+    def test_missed_commit_applied_from_epoch_query(self):
+        clock = FakeClock()
+        stack = self._stack()
+        handle = LockedConn(stack.preferred())
+        part = ReconfigParticipant(handle, stack.find,
+                                   resync_after_s=1.0, now=clock)
+        target = option_named(stack, "B")
+        r = part.handle_msg("coord", {"type": "reconfig_prepare",
+                                      "fp": target.fingerprint()})
+        assert r["type"] == "reconfig_ready"
+        # commit notification lost; not yet overdue
+        assert part.needs_resync() is None
+        clock.advance(2.0)
+        assert part.needs_resync() == "coord"  # query the prepare's sender
+        # coordinator swapped (its epoch advanced): peer adopts the commit
+        applied = part.apply_state({"type": "reconfig_state", "epoch": 1,
+                                    "fp": target.fingerprint()})
+        assert applied and handle.stack.chunnels[0].name == "B"
+        assert part.epoch == 1 and part.needs_resync() is None
+
+    def test_aborted_proposal_clears_prepared_state(self):
+        clock = FakeClock()
+        stack = self._stack()
+        handle = LockedConn(stack.preferred())
+        part = ReconfigParticipant(handle, stack.find,
+                                   resync_after_s=1.0, now=clock)
+        target = option_named(stack, "B")
+        part.handle_msg("coord", {"type": "reconfig_prepare",
+                                  "fp": target.fingerprint()})
+        clock.advance(2.0)
+        # coordinator reports no new epoch (proposal aborted elsewhere)
+        applied = part.apply_state({"type": "reconfig_state", "epoch": 0,
+                                    "fp": stack.preferred().fingerprint()})
+        assert not applied and handle.stack.chunnels[0].name == "A"
+        assert part.needs_resync() is None  # stale prepared state cleared
+
+    def test_pending_reply_defers_instead_of_clearing(self):
+        # during phase 1 nothing is decided: a resync landing then must keep
+        # the peer prepared (re-query next window), not misread the unchanged
+        # epoch as an abort and later refuse the real commit
+        clock = FakeClock()
+        stack = self._stack()
+        handle = LockedConn(stack.preferred())
+        part = ReconfigParticipant(handle, stack.find,
+                                   resync_after_s=1.0, now=clock)
+        target = option_named(stack, "B")
+        part.handle_msg("coord", {"type": "reconfig_prepare",
+                                  "fp": target.fingerprint()})
+        clock.advance(2.0)
+        assert part.needs_resync() == "coord"
+        applied = part.apply_state({"type": "reconfig_state", "epoch": 0,
+                                    "fp": stack.preferred().fingerprint(),
+                                    "pending": True})
+        assert not applied
+        assert part.needs_resync() is None  # deferred, but still prepared...
+        clock.advance(2.0)
+        assert part.needs_resync() == "coord"  # ...so the next window re-asks
+        # and the eventually-arriving commit still lands normally
+        r = part.handle_msg("coord", {"type": "reconfig_commit",
+                                      "fp": target.fingerprint(), "epoch": 1})
+        assert r["type"] == "reconfig_done"
+        assert handle.stack.chunnels[0].name == "B" and part.epoch == 1
+
+    def test_refuse_reply_clears_prepared_state(self):
+        clock = FakeClock()
+        stack = self._stack()
+        handle = LockedConn(stack.preferred())
+        part = ReconfigParticipant(handle, stack.find,
+                                   resync_after_s=1.0, now=clock)
+        part.handle_msg("coord", {"type": "reconfig_prepare",
+                                  "fp": option_named(stack, "B").fingerprint()})
+        clock.advance(2.0)
+        assert not part.apply_state({"type": "reconfig_refuse"})
+        assert part.needs_resync() is None
+        assert handle.stack.chunnels[0].name == "A"
+
+    def test_in_flight_commit_query_answers_with_decided_epoch(self):
+        # phase-2 notifications can block for seconds on an unreachable peer
+        # while the coordinator's local swap has not applied yet; a query in
+        # that window must see the commit DECISION, or a merely-delayed peer
+        # reads "aborted", clears prepared, and refuses the real commit
+        fabric = Fabric()
+        coord = HostAgent(fabric, "rs-dec")
+        querier = HostAgent(fabric, "rs-q")
+        stack = self._stack()
+        handle = LockedConn(stack.preferred())
+        target = option_named(stack, "B")
+        try:
+            coord.coordinate("c1", handle)
+            # what two_phase_commit's on_decide hook records at commit point
+            coord.record_decision("c1", handle.stats.switches + 1,
+                                  target.fingerprint())
+            r = querier.request("rs-dec", {"type": "reconfig_query",
+                                           "conn": "c1"})
+            assert r["type"] == "reconfig_state"
+            assert r["epoch"] == 1 and r["fp"] == target.fingerprint()
+            # once the local swap lands, live state and decision agree
+            handle.reconfigure(target)
+            r = querier.request("rs-dec", {"type": "reconfig_query",
+                                           "conn": "c1"})
+            assert r["epoch"] == 1 and r["fp"] == target.fingerprint()
+        finally:
+            coord.close(); querier.close()
+
+    def test_agent_loop_resyncs_prepared_peer_end_to_end(self):
+        fabric = Fabric()
+        coord = HostAgent(fabric, "rs-coord")
+        peer = HostAgent(fabric, "rs-peer")
+        stack = self._stack()
+        peer_handle = LockedConn(stack.preferred())
+        peer.register_participant("c1", peer_handle, stack.find,
+                                  resync_after_s=0.2)
+        coord_handle = LockedConn(stack.preferred())
+        target = option_named(stack, "B")
+        try:
+            # phase 1 reaches the peer...
+            r = coord.request("rs-peer", {"type": "reconfig_prepare",
+                                          "fp": target.fingerprint(),
+                                          "conn": "c1"})
+            assert r["type"] == "reconfig_ready"
+            # ...then the commit notification is "lost": the coordinator
+            # swaps locally and only answers queries
+            coord.coordinate("c1", coord_handle)
+            coord_handle.reconfigure(target)
+            deadline = time.monotonic() + 3.0
+            while (time.monotonic() < deadline
+                   and peer_handle.stack.chunnels[0].name != "B"):
+                time.sleep(0.02)
+            assert peer_handle.stack.chunnels[0].name == "B"
+        finally:
+            coord.close(); peer.close()
 
 
 class TestTrainerControllerPlane:
