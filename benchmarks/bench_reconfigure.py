@@ -23,6 +23,19 @@ run_scored_negotiation compares the multi-objective scorer against the
 historical first-compatible rule over one offer under different live
 workloads (chatty vs bulk), emitting benchmarks/out/scored_negotiation.json —
 the cost-model-drives-the-choice claim (Morpheus, PAPERS.md) end-to-end.
+
+run_fleet_kv is the FLEET-scope §7.3 scenario (repro.fleet): N simulated KV
+clients publish telemetry into the rendezvous KV store, a FleetAggregator
+folds it with an external SignalSource, and ONE fleet_controller switches
+ServerRouter↔ClientShard for the whole fleet in a single rendezvous epoch
+when the AGGREGATE offered load crosses the policy threshold — while every
+individual client stays below the per-client threshold the old per-connection
+policy would have needed (benchmarks/out/fleet_scenario.json).
+
+run_controller_barrier extends the closed loop to the lock-free mechanism: a
+multi-threaded BarrierConn data plane under a controller-INITIATED switch
+(latency_slo policy), emitting the switch blip + stop-the-world blocked time
+beside the LockedConn KV scenario.
 """
 from __future__ import annotations
 
@@ -42,6 +55,7 @@ from repro.core import (
     Fabric,
     FabricTransport,
     FnChunnel,
+    KVStore,
     LATENCY_FIRST,
     LinkModel,
     LockedConn,
@@ -51,10 +65,19 @@ from repro.core import (
     pick_compatible,
     score_stack,
 )
+from repro.fleet import (
+    FleetAggregator,
+    FleetMember,
+    FleetPublisher,
+    SpotPriceSignal,
+    fleet_conn_id,
+    fleet_controller,
+)
 from repro.serving.router import KVBackend, KVClient, Router, routing_stack
 
 JSON_OUT = pathlib.Path(__file__).parent / "out" / "controller_scenarios.json"
 SCORED_OUT = pathlib.Path(__file__).parent / "out" / "scored_negotiation.json"
+FLEET_OUT = pathlib.Path(__file__).parent / "out" / "fleet_scenario.json"
 
 
 def _stack(fabric, tag):
@@ -290,6 +313,10 @@ def run_controller_trainer(num_steps: int = 18) -> dict:
             transport="xla",
             hosts=[HostSpec(0, list(offers)), HostSpec(1, list(offers))],
         )
+        # fleet signal plane: publish this job's step telemetry so a fleet
+        # aggregator can fold it with other jobs' (cross-job DCN budgets)
+        tr.attach_fleet(fleet_id="trainfleet", period_s=0.0)
+        agg = FleetAggregator(tr.store, "trainfleet", ttl_s=600.0)
         ctl = tr.make_controller(straggler_threshold=1.3, recover_threshold=1.2,
                                  hold=2, recover_hold=2, cooldown_s=0.0)
         state = tr.init_state(jax.random.PRNGKey(0))
@@ -299,6 +326,8 @@ def run_controller_trainer(num_steps: int = 18) -> dict:
     switches = [d.to_json() for d in ctl.switch_log()]
     assert any(s["target"] == "localsgd" for s in switches), \
         f"controller never initiated the straggler mitigation: {switches}"
+    fleet_view = agg.aggregate()
+    assert fleet_view["fleet.members"] == 1, fleet_view
     return {
         "plane": "trainer",
         "num_steps": num_steps,
@@ -307,6 +336,230 @@ def run_controller_trainer(num_steps: int = 18) -> dict:
         "switches": switches,
         "decisions": [d.to_json() for d in ctl.decisions],
         "losses": [float(m["loss"]) for m in hist],
+        "fleet_view": {k: v for k, v in fleet_view.items()
+                       if not isinstance(v, dict)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scope §7.3 scenario (repro.fleet): aggregate-driven, one epoch
+# ---------------------------------------------------------------------------
+
+
+def run_fleet_kv(*, n_clients: int = 4, fast: bool = False) -> dict:
+    """N KV clients, ONE decision: per-client offered load never crosses the
+    threshold a per-client policy would need, but the fleet AGGREGATE does —
+    the fleet controller commits ServerRouter -> ClientShard for everyone in
+    a single rendezvous epoch, and back once the aggregate drains.
+
+    Single-threaded driver: clients send open-loop (sleep-paced, so the
+    measured rates track the offered rates on slow CI machines) with periodic
+    blocking probes for RTT telemetry; each member's ``poll()`` heartbeats
+    its publisher, votes on in-flight proposals, and applies committed
+    epochs."""
+    n_backends = 3
+    fleet_high, fleet_low = 180.0, 110.0
+    per_client_high = 150.0   # what the PER-CLIENT policy would have needed
+    # (label, per-client rps, iterations)
+    phases_spec = ([("low", 25.0, 16), ("high", 70.0, 36), ("low", 18.0, 26)]
+                   if fast else
+                   [("low", 25.0, 30), ("high", 70.0, 64), ("low", 18.0, 40)])
+    tick_every = 4
+    probe_every = 7
+    fleet_id = "kvfleet"
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0005))
+    backends = [KVBackend(fabric, f"fkv{i}", service_time_s=0.0003)
+                for i in range(n_backends)]
+    router = Router(fabric, "fleet-router", [b.addr for b in backends])
+    store = KVStore()
+    members, clients = [], []
+    for i in range(n_clients):
+        ep = fabric.register(f"fleet-cli{i}")
+        st = routing_stack(ep, [b.addr for b in backends],
+                           router_addr="fleet-router", prefer="server")
+        handle = LockedConn(st.preferred())
+        pub = FleetPublisher(store, fleet_id, f"cli{i}", handle.telemetry,
+                             period_s=0.02)
+        m = FleetMember(store, fleet_id, f"cli{i}", handle, st, publisher=pub)
+        m.join()
+        members.append(m)
+        clients.append(KVClient(fabric, ep, handle))
+    spot = SpotPriceSignal(trace=[0.7], period_s=3600.0)  # calm market
+    # generous TTL: heartbeat expiry has its own test; a loaded CI runner
+    # stalling the single-threaded driver for a second must not age the whole
+    # fleet out mid-phase and fake a load drain
+    agg = FleetAggregator(store, fleet_id, ttl_s=3.0, sources=[spot])
+    policy = "kv_fleet_adaptive"
+    ctl = fleet_controller(
+        store, fleet_id, members[0].stack,
+        policy=policy,
+        policy_params={"fleet_high_qps": fleet_high, "fleet_low_qps": fleet_low,
+                       "hold": 2, "spot_cap_usd_per_h": 3.0},
+        pump=lambda: [m.poll() for m in members],
+        cooldown_s=0.15,
+    )
+
+    drain_buf = [None]
+
+    def drain(handle):
+        while handle.recv(drain_buf, timeout=0.001):
+            pass
+
+    phases = []
+    peak_member_qps = 0.0
+    try:
+        for label, per_rps, n_iter in phases_spec:
+            gap = 1.0 / per_rps
+            nxt = time.monotonic()
+            for it in range(n_iter):
+                nxt += gap
+                dt = nxt - time.monotonic()
+                if dt > 0:
+                    time.sleep(dt)
+                for cli, m in zip(clients, members):
+                    try:
+                        if it % probe_every == 0:
+                            cli.request("get", f"k{it % 23}", timeout=1.0)
+                        else:
+                            m.handle.send([{"op": "get", "key": f"k{it % 23}",
+                                            "rid": -1, "reply_to": cli.addr}])
+                    except TimeoutError:
+                        pass
+                if it % 3 == 2:
+                    for m in members:
+                        drain(m.handle)
+                if (it + 1) % tick_every == 0:
+                    for m in members:
+                        m.poll()
+                    snap = agg.aggregate()
+                    member_qps = snap["fleet.member_qps"].values()
+                    if member_qps:
+                        peak_member_qps = max(peak_member_qps, *member_qps)
+                    ctl.tick(snap)
+            for m in members:
+                drain(m.handle)
+            cur = store.get(f"{fleet_conn_id(fleet_id)}/stack")
+            phases.append({
+                "phase": label,
+                "per_client_rps": per_rps,
+                "aggregate_rps": per_rps * n_clients,
+                "epoch": cur["epoch"],
+                "stacks": [repr(m.handle.stack) for m in members],
+                "fleet_snapshot": dict(ctl.decisions[-1].snapshot)
+                if ctl.decisions else {},
+            })
+    finally:
+        for b in backends:
+            b.close()
+        router.close()
+
+    return {
+        "mode": "fleet",
+        "policy": policy,
+        "n_clients": n_clients,
+        "thresholds": {"fleet_high_qps": fleet_high, "fleet_low_qps": fleet_low,
+                       "per_client_high_qps": per_client_high},
+        "phases": phases,
+        "switches": [d.to_json() for d in ctl.switch_log()],
+        "counts": ctl.counts(),
+        "peak_member_qps": peak_member_qps,
+        "member_transitions": {m.member: m.transitions for m in members},
+        "member_switches": [m.handle.stats.switches for m in members],
+        "publisher_conflicts": sum(m.publisher.conflicts for m in members),
+        "store_conflicts": store.conflicts,
+        "ext.spot_usd_per_h": spot.value(),
+    }
+
+
+def emit_fleet_scenario(*, fast: bool = False) -> dict:
+    """Run the fleet scenario, write the JSON artifact, and assert the
+    acceptance shape: one fleet-wide switch per load transition, committed in
+    a single rendezvous epoch, driven by the AGGREGATE (every individual
+    client stayed below the per-client threshold). Shared by main() and
+    run.py --smoke."""
+    res = run_fleet_kv(fast=fast)
+    FLEET_OUT.parent.mkdir(parents=True, exist_ok=True)
+    FLEET_OUT.write_text(json.dumps(res, indent=2, default=float))
+
+    low1, high, low2 = res["phases"]
+    assert low1["epoch"] == 1 and all("ServerRouter" in s for s in low1["stacks"]), low1
+    assert high["epoch"] == 2 and all(s.startswith("ClientShard") for s in high["stacks"]), high
+    assert low2["epoch"] == 3 and all(s.startswith("ServerRouter") for s in low2["stacks"]), low2
+    # exactly one committed switch per transition, fleet-wide
+    assert res["counts"]["committed"] == 2, res["counts"]
+    assert all(n == 2 for n in res["member_switches"]), res["member_switches"]
+    # the decision was the aggregate's, not any single client's
+    up = res["switches"][0]
+    agg_at_switch = up["snapshot"]["fleet.offered_qps"]
+    thr = res["thresholds"]
+    assert up["rule"] == "fleet-high-load->client-shard", up
+    assert agg_at_switch > thr["fleet_high_qps"], up["snapshot"]
+    assert res["peak_member_qps"] < thr["per_client_high_qps"], res["peak_member_qps"]
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Controller-driven BarrierConn scenario (lock-free mechanism, closed loop)
+# ---------------------------------------------------------------------------
+
+
+def run_controller_barrier(n_threads: int = 3, *, fast: bool = False) -> dict:
+    """Multi-threaded BarrierConn data plane; the controller (latency_slo
+    policy over live op-latency telemetry) initiates the SlowPath -> FastPath
+    switch itself, paying the stop-the-world barrier mid-traffic. Emits the
+    blip and total blocked time beside the LockedConn KV scenario."""
+    caps = CapabilitySet.exact("wire:obj")
+
+    def _slow_send(m):
+        time.sleep(2e-3)
+        return m
+
+    slow = FnChunnel(fn_name="SlowPath", caps=caps, on_send=_slow_send,
+                     cost=CostModel(op_latency_s=2e-3, switch_blip_s=1e-4))
+    fast_c = FnChunnel(fn_name="FastPath", caps=caps, on_send=lambda m: m,
+                       cost=CostModel(op_latency_s=1e-4, switch_blip_s=1e-4))
+    fabric = Fabric()
+    ep = fabric.register(f"barrier-ctl-{time.monotonic_ns()}")
+    stack = make_stack(Select(slow, fast_c), FabricTransport(ep, "sink"))
+    handle = BarrierConn(stack.preferred(), n_threads=n_threads)
+    ctl = conn_controller(
+        handle, stack,
+        policy="latency_slo",
+        policy_params={"slo_s": 1e-3, "metric": "op_p95_s", "hold": 2},
+        cooldown_s=0.1,
+    )
+    lat = {"SlowPath": [], "FastPath": []}
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            handle.send([b"x"])
+            lat[handle.stack.chunnels[0].name].append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=pump) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    t_end = time.monotonic() + (0.6 if fast else 1.2)
+    while time.monotonic() < t_end:
+        time.sleep(0.03)
+        ctl.tick(handle.telemetry.snapshot())
+    stop.set()
+    for t in threads:
+        t.join()
+    assert handle.stats.switches == 1, handle.stats
+    assert lat["SlowPath"] and lat["FastPath"], {k: len(v) for k, v in lat.items()}
+    return {
+        "plane": "barrier",
+        "policy": "latency_slo",
+        "n_threads": n_threads,
+        "p50_before_us": pct(lat["SlowPath"], 50) * 1e6,
+        "p50_after_us": pct(lat["FastPath"], 50) * 1e6,
+        "blip_s": handle.stats.last_switch_s,
+        "total_blocked_s": handle.stats.total_blocked_s,
+        "switches": [d.to_json() for d in ctl.switch_log()],
+        "counts": ctl.counts(),
+        "final_stack": repr(handle.stack),
     }
 
 
@@ -323,17 +576,29 @@ def main() -> None:
              f"first={row['first_compatible']};scored={row['scored']}")
     print(f"# scored negotiation JSON: {SCORED_OUT}", file=sys.stderr, flush=True)
 
-    results = {"kv": run_controller_kv(), "trainer": run_controller_trainer()}
+    results = {"kv": run_controller_kv(), "trainer": run_controller_trainer(),
+               "barrier": run_controller_barrier()}
     JSON_OUT.parent.mkdir(parents=True, exist_ok=True)
     JSON_OUT.write_text(json.dumps(results, indent=2, default=float))
-    kv, trainer = results["kv"], results["trainer"]
+    kv, trainer, barrier = results["kv"], results["trainer"], results["barrier"]
     assert kv["switches"], "controller never initiated a KV routing switch"
     emit("reconfig_ctl_kv_switches", kv["blip_s"] * 1e6,
          f"n={len(kv['switches'])};policy={kv['policy']};"
          f"final={kv['final_stack'].split(' ')[0]}")
     emit("reconfig_ctl_trainer_switches", 0.0,
          f"n={len(trainer['switches'])};final={trainer['final_transport']}")
+    emit("reconfig_ctl_barrier_switch", barrier["blip_s"] * 1e6,
+         f"blocked_us={barrier['total_blocked_s']*1e6:.1f};"
+         f"p50_before={barrier['p50_before_us']:.0f}us;"
+         f"p50_after={barrier['p50_after_us']:.0f}us")
     print(f"# controller scenario JSON: {JSON_OUT}", file=sys.stderr, flush=True)
+
+    fleet = emit_fleet_scenario()
+    emit("reconfig_fleet_kv", 0.0,
+         f"clients={fleet['n_clients']};epochs={fleet['phases'][-1]['epoch']};"
+         f"switches={fleet['counts']['committed']};"
+         f"peak_member_qps={fleet['peak_member_qps']:.0f}")
+    print(f"# fleet scenario JSON: {FLEET_OUT}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -47,7 +47,11 @@ def smoke() -> None:
         print(f"# {mod_name} import ok", file=sys.stderr)
     common.smoke_check()
 
-    from benchmarks.bench_reconfigure import emit_scored_negotiation, run_controller_kv
+    from benchmarks.bench_reconfigure import (
+        emit_fleet_scenario,
+        emit_scored_negotiation,
+        run_controller_kv,
+    )
 
     scored = emit_scored_negotiation()
     print("smoke_scored_negotiation,0.00,"
@@ -59,6 +63,16 @@ def smoke() -> None:
     assert "ClientShard" in res["switches"][0]["target"], res["switches"][0]
     print(f"smoke_controller_kv,{res['blip_s'] * 1e6:.2f},"
           f"switches={len(res['switches'])};policy={res['policy']}")
+
+    # fleet signal plane: aggregate-driven switch, one rendezvous epoch for
+    # the whole fleet (asserts the acceptance shape internally and writes
+    # benchmarks/out/fleet_scenario.json — a CI artifact)
+    fleet = emit_fleet_scenario(fast=True)
+    print("smoke_fleet_kv,0.00,"
+          f"clients={fleet['n_clients']};"
+          f"switches={fleet['counts']['committed']};"
+          f"epochs={fleet['phases'][-1]['epoch']};"
+          f"peak_member_qps={fleet['peak_member_qps']:.0f}")
 
     print("# smoke ok on jax compat paths:", file=sys.stderr)
     for line in compat.report().splitlines():

@@ -36,6 +36,78 @@ UNIT = WireType.of("unit")
 REJIT_BLIP_S = 2.0
 
 
+# ---------------------------------------------------------------------------
+# Mesh-aware cost calibration (ROADMAP "Mesh-aware cost models")
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CostCalibration:
+    """Live overrides for the static transport cost annotations.
+
+    n_fast            the LIVE fast-axis width — hierarchy credit in
+                      ``dcn_bytes_factor`` divides by this instead of the
+                      static ``StepChunnel.NOMINAL_FAST`` guess
+    dcn_bytes_per_s   measured slow-tier link bandwidth (e.g. from
+                      ``repro.fleet.signals.LinkBandwidthSignal``) — feeds
+                      ``calibrated_objective``'s byte→seconds normalizer
+    """
+
+    n_fast: Optional[int] = None
+    dcn_bytes_per_s: Optional[float] = None
+
+
+_CALIBRATION = CostCalibration()
+
+
+def calibrate_cost_models(*, mesh=None, fast_axis: str = "data",
+                          link_bytes_per_s: Optional[float] = None,
+                          signal=None) -> CostCalibration:
+    """Derive the transport cost models' terms from the live mesh shape and a
+    measured link bandwidth, instead of the static ``NOMINAL_FAST``
+    annotation. Process-wide (the mesh is process-wide too): the trainer
+    calls this at construction; ``reset_cost_calibration`` restores the
+    static annotations (tests). ``signal`` is anything whose ``read()``
+    yields ``ext.link_bytes_per_s`` (``LinkBandwidthSignal``); an explicit
+    ``link_bytes_per_s`` wins over it. Fields not derivable from THIS call's
+    arguments keep their current calibration (so the trainer installing its
+    mesh width does not wipe a previously measured bandwidth)."""
+    global _CALIBRATION
+    n_fast = _CALIBRATION.n_fast
+    if mesh is not None and fast_axis in getattr(mesh, "axis_names", ()):
+        n_fast = int(mesh.shape[fast_axis])
+    bw = link_bytes_per_s
+    if bw is None and signal is not None:
+        bw = (signal.read() or {}).get("ext.link_bytes_per_s")
+    if bw is None:
+        bw = _CALIBRATION.dcn_bytes_per_s
+    _CALIBRATION = CostCalibration(n_fast=n_fast, dcn_bytes_per_s=bw)
+    return _CALIBRATION
+
+
+def cost_calibration() -> CostCalibration:
+    return _CALIBRATION
+
+
+def reset_cost_calibration() -> None:
+    global _CALIBRATION
+    _CALIBRATION = CostCalibration()
+
+
+def calibrated_objective(base):
+    """``base`` (a ``repro.core.cost.Objective``) with its byte→seconds
+    normalizer derived from the measured link bandwidth, when one has been
+    calibrated — so byte-weighted scoring reflects the link the fleet
+    actually runs on, not the nominal 1 GB/s default."""
+    import dataclasses
+
+    bw = _CALIBRATION.dcn_bytes_per_s
+    if not bw:
+        return base
+    return dataclasses.replace(base, dcn_s_per_byte=1.0 / bw,
+                               name=f"{base.name}@measured")
+
+
 class StepChunnel(Chunnel):
     """A chunnel applied to pytrees inside the jitted step function.
 
@@ -52,9 +124,18 @@ class StepChunnel(Chunnel):
     manual_axes: tuple = ()
 
     #: nominal fast-axis width assumed by cost models that divide DCN bytes by
-    #: |fast| — static annotations cannot see the mesh, so hierarchy credit is
-    #: taken at this width (coarse on purpose; the scorer only needs ordering)
+    #: |fast| when NO live calibration is installed — the fallback for code
+    #: that scores transports without a mesh in hand (coarse on purpose; the
+    #: scorer only needs ordering). ``calibrate_cost_models(mesh=...)``
+    #: replaces it with the live axis width.
     NOMINAL_FAST = 4
+
+    def fast_width(self) -> int:
+        """Fast-axis width the cost model divides DCN bytes by: the LIVE
+        calibrated width when ``calibrate_cost_models`` has seen a mesh,
+        else the static ``NOMINAL_FAST`` annotation."""
+        cal = cost_calibration()
+        return cal.n_fast if cal.n_fast else self.NOMINAL_FAST
 
     #: False for transports that trade gradient freshness for communication
     #: (localsgd-style): their cost models honestly win the comm-cost contest,
@@ -220,7 +301,7 @@ class GradHierarchical(StepChunnel):
         return CostModel(
             op_latency_s=2e-3,
             dcn_bytes_per_byte=collectives.dcn_bytes_factor(
-                "hierarchical", n_fast=self.NOMINAL_FAST),
+                "hierarchical", n_fast=self.fast_width()),
             switch_blip_s=REJIT_BLIP_S)
 
     def apply(self, tree, state, ctx):
@@ -304,7 +385,7 @@ class GradHierCompressed(StepChunnel):
         return CostModel(
             op_latency_s=2.2e-3,
             dcn_bytes_per_byte=collectives.dcn_bytes_factor(
-                "hier_compressed", n_fast=self.NOMINAL_FAST,
+                "hier_compressed", n_fast=self.fast_width(),
                 wire_ratio=compress.int8_wire_ratio(self.block)),
             switch_blip_s=REJIT_BLIP_S)
 

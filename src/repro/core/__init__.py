@@ -48,7 +48,7 @@ from repro.core.negotiate import (
     pick_compatible,
 )
 from repro.core.reconfigure import BarrierConn, ConnHandle, LockedConn
-from repro.core.rendezvous import KVStore
+from repro.core.rendezvous import KVStore, TxnConflict
 from repro.core.runtime import FabricTransport, HostAgent
 from repro.core.stack import ConcreteStack, Select, Stack, StackTypeError, make_stack
 from repro.core.telemetry import ConnTelemetry, Ewma, EwmaQuantile
@@ -61,7 +61,8 @@ __all__ = [
     "LATENCY_FIRST", "LinkModel", "LockedConn", "BarrierConn", "NegotiatedConn",
     "NegotiationError", "Objective", "PolicyContext", "ReconfigController",
     "ReliableChannel", "Rule", "ScoredTarget", "Select", "ServerNegotiator",
-    "Stack", "StackTypeError", "WireType", "ZeroRttCache", "above", "all_of",
+    "Stack", "StackTypeError", "TxnConflict", "WireType", "ZeroRttCache",
+    "above", "all_of",
     "any_of", "available_policies", "below", "client_negotiate",
     "conn_controller", "get_policy", "make_stack", "option_named",
     "pick_compatible", "policy_rules", "register_policy", "score_stack",

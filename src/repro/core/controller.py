@@ -135,11 +135,15 @@ class ReconfigController:
         cooldown_s: minimum wall-clock gap after a committed switch before
             any rule may fire again.
         now: clock override for deterministic tests.
-        max_decisions: bound on the retained ``decisions`` audit log.
+        max_history: bound on the retained ``decisions`` audit log. Lifetime
+            totals survive eviction — read ``counts()`` for them; only the
+            per-decision snapshots are windowed. (``max_decisions`` is the
+            legacy spelling of the same knob.)
 
     Call ``tick(snapshot)`` once per control interval with a telemetry
     snapshot (``ConnTelemetry.snapshot()``); read ``decisions`` /
-    ``switch_log()`` for the audit trail.
+    ``switch_log()`` for the audit trail and ``counts()`` for lifetime
+    totals.
     """
 
     def __init__(
@@ -150,7 +154,8 @@ class ReconfigController:
         *,
         cooldown_s: float = 5.0,
         now: Callable[[], float] = time.monotonic,
-        max_decisions: int = 4096,
+        max_history: int = 4096,
+        max_decisions: Optional[int] = None,
     ):
         names = [r.name for r in rules]
         if len(set(names)) != len(names):
@@ -166,7 +171,13 @@ class ReconfigController:
         self._ticks = 0
         # bounded: a long-lived loop ticking every step must not grow memory
         # linearly in run length (each Decision retains a snapshot dict)
-        self.decisions: Deque[Decision] = deque(maxlen=max_decisions)
+        if max_decisions is not None:   # legacy alias for max_history
+            max_history = max_decisions
+        self.decisions: Deque[Decision] = deque(maxlen=max_history)
+        # lifetime totals: decisions fall off the deque, these never reset
+        self.total_fired = 0
+        self.total_committed = 0
+        self.fired_by_rule: Dict[str, int] = {r.name: 0 for r in self.rules}
 
     def streak(self, rule_name: str) -> int:
         return self._streak[rule_name]
@@ -217,6 +228,9 @@ class ReconfigController:
                 self._last_switch_t = now
                 for k in self._streak:  # re-arm from scratch after a transition
                     self._streak[k] = 0
+            self.total_fired += 1
+            self.total_committed += int(committed)
+            self.fired_by_rule[armed.name] += 1
             d = Decision(self._ticks, now, armed.name, label,
                          True, committed, "switched" if committed else "refused",
                          snapshot)
@@ -224,7 +238,16 @@ class ReconfigController:
         return d
 
     def switch_log(self) -> List[Decision]:
+        """Committed switches still in the retained ``decisions`` window —
+        ``counts()["committed"]`` is the lifetime total."""
         return [d for d in self.decisions if d.fired and d.committed]
+
+    def counts(self) -> dict:
+        """Lifetime decision totals — preserved across ``max_history``
+        eviction of the per-decision audit log."""
+        return {"ticks": self._ticks, "fired": self.total_fired,
+                "committed": self.total_committed,
+                "by_rule": dict(self.fired_by_rule)}
 
 
 # ---------------------------------------------------------------------------

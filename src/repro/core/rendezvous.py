@@ -9,13 +9,27 @@ current participants.
 The in-memory store mirrors the Redis/etcd interface the paper assumes
 (compare-and-swap inside a transaction); it can be sharded per connection-id
 since negotiation state is never shared across connections.
+
+Two transaction disciplines:
+
+  transact        PESSIMISTIC — ``fn`` runs with the store lock held; never
+                  conflicts. Right for short control-plane transactions
+                  (join/vote/commit), whose critical sections are tiny.
+  try_transact    OPTIMISTIC — ``fn`` runs against a read-tracking snapshot
+                  view with NO lock held; the commit re-acquires the lock,
+                  validates every read key's version, and raises
+                  ``TxnConflict`` if another writer interleaved.
+                  ``transact_retry`` wraps it with bounded backoff. Right for
+                  the fleet signal plane, where many publishers read-modify-
+                  write a shared roster concurrently and must not serialize
+                  their (snapshot-building) work behind one global lock.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class TxnConflict(RuntimeError):
@@ -29,6 +43,9 @@ class KVStore:
         self._data: Dict[str, Any] = {}
         self._ver: Dict[str, int] = {}
         self._lock = threading.RLock()
+        #: optimistic commits rejected because a read key's version moved —
+        #: observability for contention tests and the fleet publisher
+        self.conflicts = 0
 
     def get(self, key: str) -> Any:
         with self._lock:
@@ -38,18 +55,69 @@ class KVStore:
         with self._lock:
             return self._ver.get(key, 0)
 
+    def read_versioned(self, key: str) -> Tuple[Any, int]:
+        """(value, version) read atomically — the unit of optimistic reads."""
+        with self._lock:
+            return self._data.get(key), self._ver.get(key, 0)
+
+    def keys(self, prefix: str = "") -> List[str]:
+        """All live keys under ``prefix`` (the etcd range-scan analogue) —
+        fleet debugging/tooling; membership itself is roster-driven (the
+        roster and member records are written in one atomic txn)."""
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
     def transact(self, fn: Callable[["Txn"], Any]) -> Any:
         """Run fn against a serializable view; commits atomically."""
         with self._lock:
             txn = Txn(self)
             out = fn(txn)
-            for k, v in txn.writes.items():
-                self._data[k] = v
-                self._ver[k] = self._ver.get(k, 0) + 1
-            for k in txn.deletes:
-                self._data.pop(k, None)
-                self._ver[k] = self._ver.get(k, 0) + 1
+            self._apply(txn)
             return out
+
+    def try_transact(self, fn: Callable[["Txn"], Any]) -> Any:
+        """One OPTIMISTIC attempt: ``fn`` runs against a snapshot view without
+        the store lock (first read of each key pins its value+version for the
+        rest of the transaction); the commit validates that no read key's
+        version moved and raises ``TxnConflict`` otherwise. ``fn`` must be
+        pure against the txn view — it may run several times under
+        ``transact_retry``."""
+        txn = Txn(self, track_reads=True)
+        out = fn(txn)
+        with self._lock:
+            for k, ver in txn.reads.items():
+                if self._ver.get(k, 0) != ver:
+                    self.conflicts += 1
+                    raise TxnConflict(
+                        f"key {k!r} moved to v{self._ver.get(k, 0)} "
+                        f"(read at v{ver})")
+            self._apply(txn)
+            return out
+
+    def transact_retry(self, fn: Callable[["Txn"], Any], *,
+                       max_retries: int = 32, backoff_s: float = 2e-4,
+                       on_conflict: Optional[Callable[[], None]] = None) -> Any:
+        """``try_transact`` with bounded linear-backoff retries; the standard
+        wrapper for contended read-modify-write (fleet publishers updating the
+        shared roster). ``on_conflict`` fires once per retried conflict."""
+        for attempt in range(max_retries + 1):
+            try:
+                return self.try_transact(fn)
+            except TxnConflict:
+                if on_conflict is not None:
+                    on_conflict()
+                if attempt == max_retries:
+                    raise
+                time.sleep(backoff_s * (attempt + 1))
+
+    def _apply(self, txn: "Txn") -> None:
+        # caller holds self._lock
+        for k, v in txn.writes.items():
+            self._data[k] = v
+            self._ver[k] = self._ver.get(k, 0) + 1
+        for k in txn.deletes:
+            self._data.pop(k, None)
+            self._ver[k] = self._ver.get(k, 0) + 1
 
     def compare_and_swap(self, key: str, expect_version: int, value: Any) -> bool:
         with self._lock:
@@ -61,16 +129,26 @@ class KVStore:
 
 
 class Txn:
-    def __init__(self, store: KVStore):
+    def __init__(self, store: KVStore, *, track_reads: bool = False):
         self._store = store
+        self._track = track_reads
         self.writes: Dict[str, Any] = {}
         self.deletes: set = set()
+        self.reads: Dict[str, int] = {}     # key -> version at first read
+        self._read_cache: Dict[str, Any] = {}
 
     def get(self, key: str) -> Any:
         if key in self.writes:
             return self.writes[key]
         if key in self.deletes:
             return None
+        if self._track:
+            # snapshot view: first read pins (value, version) for the txn
+            if key not in self.reads:
+                val, ver = self._store.read_versioned(key)
+                self.reads[key] = ver
+                self._read_cache[key] = val
+            return self._read_cache[key]
         return self._store._data.get(key)
 
     def put(self, key: str, value: Any) -> None:

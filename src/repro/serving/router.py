@@ -27,7 +27,14 @@ from typing import Any, Dict, List, Optional
 from repro.core import Fabric, FabricTransport, LinkModel, Select, Stack, make_stack
 from repro.core.capability import CapabilitySet
 from repro.core.chunnel import Chunnel, Datapath, WireType
-from repro.core.controller import PolicyContext, Rule, above, below, register_policy
+from repro.core.controller import (
+    PolicyContext,
+    Rule,
+    above,
+    all_of,
+    below,
+    register_policy,
+)
 from repro.core.cost import CostModel
 
 KV_REQ = WireType.of("kvreq")
@@ -216,6 +223,45 @@ def kv_load_adaptive_policy(ctx: PolicyContext) -> List[Rule]:
         Rule("low-load->server-router", below("ops_per_s", low),
              ctx.candidate_named("ServerRouter").target, hold=hold, priority=0),
     ]
+
+
+@register_policy("kv_fleet_adaptive")
+def kv_fleet_adaptive_policy(ctx: PolicyContext) -> List[Rule]:
+    """The §7.3 load-balancing policy at FLEET scope: predicates read the
+    ``FleetAggregator`` snapshot (``fleet.*``/``ext.*`` keys), and the rules
+    run in a ``repro.fleet.fleet_controller`` so the switch commits once,
+    fleet-wide, in a single rendezvous epoch — instead of N per-client
+    controllers crossing their own thresholds at their own times.
+
+      fleet.offered_qps > fleet_high_qps  ⇒ ClientShard (direct; no router
+                                            hop/queueing under aggregate load)
+      fleet.offered_qps < fleet_low_qps   ⇒ ServerRouter (backends
+                                            re-provisionable behind the router)
+
+    With ``spot_cap_usd_per_h`` set, a MULTI-SOURCE clause combines the fleet
+    aggregate with an external ``SignalSource`` value: a spot-price spike
+    while aggregate load is below the high-water mark consolidates traffic
+    behind the router (priority between the two load rules), so operators can
+    shrink the backend fleet while the market is expensive."""
+    p = ctx.params
+    high = p.get("fleet_high_qps", 200.0)
+    low = p.get("fleet_low_qps", 120.0)
+    hold = p.get("hold", 2)
+    rules = [
+        Rule("fleet-high-load->client-shard", above("fleet.offered_qps", high),
+             ctx.candidate_named("ClientShard").target, hold=hold, priority=2),
+        Rule("fleet-low-load->server-router", below("fleet.offered_qps", low),
+             ctx.candidate_named("ServerRouter").target, hold=hold, priority=0),
+    ]
+    spot_cap = p.get("spot_cap_usd_per_h")
+    if spot_cap is not None:
+        rules.insert(1, Rule(
+            "fleet-spot-spike->server-router",
+            all_of(above("ext.spot_usd_per_h", spot_cap),
+                   below("fleet.offered_qps", high)),
+            ctx.candidate_named("ServerRouter").target,
+            hold=hold, priority=1))
+    return rules
 
 
 def routing_stack(ep, backends, router_addr: str = "router", *,

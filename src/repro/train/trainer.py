@@ -39,7 +39,13 @@ import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import Checkpointer
-from repro.comm.chunnels import TRANSPORTS, StepChunnel, init_grad_states, make_transport
+from repro.comm.chunnels import (
+    TRANSPORTS,
+    StepChunnel,
+    calibrate_cost_models,
+    init_grad_states,
+    make_transport,
+)
 from repro.configs.base import ModelConfig, ShapeConfig, ShardingConfig, TrainConfig
 from repro.core import KVStore, Stack, make_stack
 from repro.core.controller import (
@@ -161,6 +167,10 @@ class ReconfigurableTrainer:
         self._param_bytes = 4 * sum(  # f32 gradient bytes per full sync
             int(np.prod(s.shape)) for s in jax.tree.leaves(self.model.param_shapes()))
         self._live_state = None  # current TrainState while a controller drives run()
+        self._fleet_pub = None   # optional fleet signal plane (attach_fleet)
+        # mesh-aware cost models (ROADMAP): transport cost annotations divide
+        # DCN bytes by the LIVE fast-axis width, not the NOMINAL_FAST guess
+        calibrate_cost_models(mesh=mesh, fast_axis="data")
         self._build_step()
 
     # -- negotiation (multi-party, rendezvous §5.3) ----------------------------
@@ -269,6 +279,27 @@ class ReconfigurableTrainer:
                    else {f"host{h.host_id}": dt for h in self.hosts})
         self.telemetry.record_step(reports)
         self.telemetry.record_wire(self._dcn_bytes_per_step())
+        if self._fleet_pub is not None:
+            self._fleet_pub.maybe_publish(
+                extra={"transport": self.transport_name})
+
+    def attach_fleet(self, fleet_id: str = "trainfleet", member: Optional[str] = None,
+                     *, store: Optional[KVStore] = None, period_s: float = 0.0):
+        """Join the fleet signal plane: publish this job's step telemetry
+        into the rendezvous KV (``repro.fleet.FleetPublisher``) so a
+        ``FleetAggregator`` can fold it with other jobs' — cross-job DCN
+        budgets, fleet-wide straggler views. ``reset_window=False`` because a
+        local controller (``make_controller``) may also be snapshotting this
+        telemetry; the published rates then cover its tick window. Defaults
+        to this trainer's own rendezvous store; pass the shared one in
+        multi-job deployments."""
+        from repro.fleet import FleetPublisher
+
+        self._fleet_pub = FleetPublisher(
+            store or self.store, fleet_id,
+            member or f"host{self.hosts[0].host_id}:{self.conn_id}",
+            self.telemetry, period_s=period_s, reset_window=False)
+        return self._fleet_pub
 
     def _controller_snapshot(self, dt: float) -> dict:
         snap = self.telemetry.snapshot()

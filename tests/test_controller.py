@@ -211,11 +211,36 @@ class TestControllerPolicy:
                 lambda t: True, lambda: "A")
 
     def test_decision_log_is_bounded(self):
+        # max_decisions is the legacy alias of max_history — both must bound
         ctl = ReconfigController([Rule("hot", above("x", 1.0), "B", hold=99)],
                                  lambda t: True, lambda: "A", max_decisions=10)
         for _ in range(50):
             ctl.tick({"x": 0.0})
         assert len(ctl.decisions) == 10
+
+    def test_counts_survive_history_eviction(self):
+        # every tick fires (target B never becomes current): with only 5
+        # retained decisions, the lifetime totals must still count all 20
+        ctl = ReconfigController([Rule("hot", above("x", 1.0), "B", hold=1)],
+                                 lambda t: True, lambda: "A",
+                                 max_history=5, cooldown_s=0.0)
+        for _ in range(20):
+            ctl.tick({"x": 2.0})
+        assert len(ctl.decisions) == 5
+        assert len(ctl.switch_log()) == 5          # windowed view
+        c = ctl.counts()                           # lifetime view
+        assert c == {"ticks": 20, "fired": 20, "committed": 20,
+                     "by_rule": {"hot": 20}}
+
+    def test_counts_track_refused_switches(self):
+        ctl = ReconfigController([Rule("hot", above("x", 1.0), "B", hold=1)],
+                                 lambda t: False, lambda: "A",
+                                 max_history=4, cooldown_s=0.0)
+        for _ in range(9):
+            ctl.tick({"x": 2.0})
+        c = ctl.counts()
+        assert c["fired"] == 9 and c["committed"] == 0
+        assert not ctl.switch_log()
 
 
 class TestConnControllerIntegration:

@@ -1,0 +1,719 @@
+"""Fleet signal plane tests: optimistic KV transactions under contention,
+versioned heartbeat publishing, stale-member expiry, multi-source
+aggregation, mesh-aware cost calibration, and the acceptance scenario — a
+fleet of KV clients switching ServerRouter↔ClientShard exactly once,
+fleet-wide, in a single rendezvous epoch, on the AGGREGATE offered load."""
+import threading
+import time
+import types
+
+import pytest
+
+from repro.core import ConnTelemetry, Fabric, KVStore, LockedConn, TxnConflict
+from repro.core import rendezvous
+from repro.fleet import (
+    CallbackSignal,
+    CarbonIntensitySignal,
+    FleetAggregator,
+    FleetMember,
+    FleetPublisher,
+    LinkBandwidthSignal,
+    SpotPriceSignal,
+    StaticSignal,
+    fleet_conn_id,
+    fleet_controller,
+    measure_link_bandwidth,
+)
+from repro.serving.router import (
+    AddressedTransport,
+    ServerRouterChunnel,
+    routing_stack,
+)
+from repro.core.stack import make_stack
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# KVStore optimistic transactions
+# ---------------------------------------------------------------------------
+
+
+class TestOptimisticTransactions:
+    def test_try_transact_detects_interleaved_write(self):
+        store = KVStore()
+        store.transact(lambda t: t.put("k", 1))
+
+        def fn(txn):
+            v = txn.get("k")
+            # another writer commits between our read and our commit
+            store.transact(lambda t: t.put("k", 99))
+            txn.put("k", v + 1)
+
+        with pytest.raises(TxnConflict):
+            store.try_transact(fn)
+        assert store.get("k") == 99  # the conflicting txn left no partial write
+        assert store.conflicts == 1
+
+    def test_snapshot_view_is_stable_within_txn(self):
+        store = KVStore()
+        store.transact(lambda t: t.put("k", "v0"))
+        seen = []
+
+        def fn(txn):
+            seen.append(txn.get("k"))
+            store.transact(lambda t: t.put("k", "v1"))
+            seen.append(txn.get("k"))  # pinned first-read value, not v1
+            txn.put("other", 1)
+
+        with pytest.raises(TxnConflict):
+            store.try_transact(fn)
+        assert seen == ["v0", "v0"]
+
+    def test_transact_retry_converges_under_contention(self):
+        """Concurrent read-modify-writes force TxnConflict retries (the sleep
+        widens the read->commit window so writers genuinely interleave), and
+        no increment is lost."""
+        store = KVStore()
+        conflicts = []
+        n_threads, n_incr = 4, 25
+
+        def incr(txn):
+            v = txn.get("ctr") or 0
+            time.sleep(0.0004)
+            txn.put("ctr", v + 1)
+
+        def worker():
+            for _ in range(n_incr):
+                store.transact_retry(incr, max_retries=200,
+                                     on_conflict=lambda: conflicts.append(1))
+
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert store.get("ctr") == n_threads * n_incr
+        assert conflicts, "contention never produced a TxnConflict retry"
+        assert store.conflicts == len(conflicts)
+
+    def test_transact_retry_gives_up(self):
+        store = KVStore()
+
+        def always_conflicts(txn):
+            txn.get("k")
+            store.transact(lambda t: t.put("k", object()))
+            txn.put("k", 1)
+
+        with pytest.raises(TxnConflict):
+            store.transact_retry(always_conflicts, max_retries=3, backoff_s=0.0)
+        assert store.conflicts == 4  # initial try + 3 retries
+
+    def test_keys_prefix_scan(self):
+        store = KVStore()
+        for k in ("fleet/a/member/x", "fleet/a/member/y", "fleet/b/member/z"):
+            store.transact(lambda t, k=k: t.put(k, 1))
+        assert store.keys("fleet/a/member/") == [
+            "fleet/a/member/x", "fleet/a/member/y"]
+        assert len(store.keys()) == 3
+
+
+# ---------------------------------------------------------------------------
+# Publish
+# ---------------------------------------------------------------------------
+
+
+class TestFleetPublisher:
+    def test_versioned_heartbeat_records(self):
+        clock = FakeClock()
+        store = KVStore()
+        tel = ConnTelemetry(now=clock)
+        pub = FleetPublisher(store, "f", "m0", tel, period_s=0.5, now=clock)
+        tel.record_send(2, 200, 0.001)
+        rec = pub.publish()
+        assert rec["seq"] == 1 and rec["at"] == 0.0
+        assert rec["snapshot"]["msgs_out"] == 2
+        assert store.get("fleet/f/roster") == {"m0": 0.0}
+
+        clock.advance(0.2)
+        assert pub.maybe_publish() is None  # within period
+        clock.advance(0.4)
+        rec2 = pub.maybe_publish()
+        assert rec2["seq"] == 2 and rec2["at"] == pytest.approx(0.6)
+        assert store.get("fleet/f/member/m0")["seq"] == 2
+        # versions are store-level too: the record key advanced twice
+        assert store.version("fleet/f/member/m0") == 2
+
+    def test_publish_rates_are_windowed_per_publish(self):
+        clock = FakeClock()
+        store = KVStore()
+        tel = ConnTelemetry(now=clock)
+        pub = FleetPublisher(store, "f", "m0", tel, period_s=0.0, now=clock)
+        clock.advance(1.0)
+        for _ in range(10):
+            tel.record_send(1, 100, 0.001)
+        assert pub.publish()["snapshot"]["ops_per_s"] == pytest.approx(10.0)
+        clock.advance(1.0)
+        for _ in range(4):
+            tel.record_send(1, 100, 0.001)
+        # reset_window=True: the second publish measures only its own window
+        assert pub.publish()["snapshot"]["ops_per_s"] == pytest.approx(4.0)
+
+    def test_reset_window_false_leaves_rates_to_other_consumer(self):
+        clock = FakeClock()
+        store = KVStore()
+        tel = ConnTelemetry(now=clock)
+        pub = FleetPublisher(store, "f", "m0", tel, period_s=0.0,
+                             reset_window=False, now=clock)
+        clock.advance(1.0)
+        for _ in range(6):
+            tel.record_send(1, 100, 0.001)
+        assert pub.publish()["snapshot"]["ops_per_s"] == pytest.approx(6.0)
+        clock.advance(1.0)
+        # no traffic since, but the window was NOT reset by our publish:
+        # rates still cover the whole 2 s interval (3 ops/s), not 0
+        assert pub.publish()["snapshot"]["ops_per_s"] == pytest.approx(3.0)
+
+    def test_concurrent_publishers_lose_no_roster_entries(self):
+        store = KVStore()
+        n = 6
+        pubs = [FleetPublisher(store, "f", f"m{i}", ConnTelemetry(),
+                               period_s=0.0) for i in range(n)]
+
+        def worker(p):
+            for _ in range(10):
+                p.publish()
+
+        threads = [threading.Thread(target=worker, args=(p,)) for p in pubs]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        roster = store.get("fleet/f/roster")
+        assert sorted(roster) == [f"m{i}" for i in range(n)]
+        for i in range(n):
+            assert store.get(f"fleet/f/member/m{i}")["seq"] == 10
+
+    def test_retire_removes_record_and_roster_entry(self):
+        store = KVStore()
+        pub = FleetPublisher(store, "f", "m0", ConnTelemetry(), period_s=0.0)
+        pub.publish()
+        pub.retire()
+        assert store.get("fleet/f/roster") == {}
+        assert store.get("fleet/f/member/m0") is None
+
+
+# ---------------------------------------------------------------------------
+# Aggregate + expiry
+# ---------------------------------------------------------------------------
+
+
+def _publish_member(store, fleet_id, name, clock, *, ops=0, rtt=None,
+                    straggler=None, period_s=0.0):
+    tel = ConnTelemetry(now=clock)
+    pub = FleetPublisher(store, fleet_id, name, tel, period_s=period_s,
+                         now=clock)
+    for _ in range(ops):
+        tel.record_send(1, 100, 0.001)
+    if rtt is not None:
+        for _ in range(50):  # drive the EWMA quantiles to the value
+            tel.record_rtt(rtt)
+    if straggler is not None:
+        tel.record_step({"p0": 1.0, "p1": straggler})
+    return pub, tel
+
+
+class TestFleetAggregator:
+    def test_folds_members_and_merges_signals(self):
+        clock = FakeClock()
+        store = KVStore()
+        pa, ta = _publish_member(store, "f", "a", clock)
+        pb, tb = _publish_member(store, "f", "b", clock)
+        clock.advance(1.0)
+        for _ in range(30):
+            ta.record_send(1, 100, 0.001)
+        for _ in range(10):
+            tb.record_send(1, 50, 0.001)
+        for _ in range(50):
+            ta.record_rtt(0.004)
+            tb.record_rtt(0.012)
+        pa.publish()
+        pb.publish()
+        agg = FleetAggregator(
+            store, "f", ttl_s=10.0, now=clock,
+            sources=[StaticSignal({"ext.carbon_gco2": 310.0})])
+        s = agg.aggregate()
+        assert s["fleet.members"] == 2 and s["fleet.stale_members"] == 0
+        assert s["fleet.offered_qps"] == pytest.approx(40.0)
+        assert s["fleet.bytes_per_s"] == pytest.approx(3500.0)
+        # p95 combines conservatively (max); p50 is qps-weighted toward the
+        # member carrying more load (30 qps at ~4ms vs 10 qps at ~12ms)
+        assert s["fleet.rtt_p95_s"] == pytest.approx(0.012, rel=0.2)
+        assert s["fleet.rtt_p50_s"] < 0.008
+        assert s["fleet.qps_imbalance"] == pytest.approx(1.5)
+        assert s["fleet.member_qps"]["a"] == pytest.approx(30.0)
+        assert s["ext.carbon_gco2"] == 310.0
+
+    def test_straggler_view_is_max_over_members(self):
+        clock = FakeClock()
+        store = KVStore()
+        pa, _ = _publish_member(store, "f", "a", clock, straggler=1.1)
+        pb, _ = _publish_member(store, "f", "b", clock, straggler=2.5)
+        pa.publish()
+        pb.publish()
+        s = FleetAggregator(store, "f", ttl_s=10.0, now=clock).aggregate()
+        assert s["fleet.straggler_ratio"] == pytest.approx(2.5)
+
+    def test_heartbeat_expiry_drops_and_deletes_stale_members(self):
+        clock = FakeClock()
+        store = KVStore()
+        pa, _ = _publish_member(store, "f", "a", clock)
+        pb, _ = _publish_member(store, "f", "b", clock)
+        pa.publish()
+        pb.publish()
+        agg = FleetAggregator(store, "f", ttl_s=1.0, now=clock)
+        assert agg.aggregate()["fleet.members"] == 2
+
+        clock.advance(0.8)
+        pb.publish()          # b heartbeats; a goes silent
+        clock.advance(0.5)    # a's heartbeat age: 1.3 > ttl; b's: 0.5
+        s = agg.aggregate()
+        assert s["fleet.members"] == 1
+        assert s["fleet.stale_members"] == 1
+        # expiry physically removed a's record + roster entry
+        assert store.get("fleet/f/member/a") is None
+        assert sorted(store.get("fleet/f/roster")) == ["b"]
+        assert agg.expired_total == 1
+
+        pa.publish()          # a recovers: next aggregate sees it again
+        assert agg.aggregate()["fleet.members"] == 2
+
+    def test_expiry_spares_member_that_republished_in_between(self):
+        clock = FakeClock()
+        store = KVStore()
+        pa, _ = _publish_member(store, "f", "a", clock)
+        pa.publish()
+        agg = FleetAggregator(store, "f", ttl_s=1.0, now=clock)
+        clock.advance(2.0)
+        # a looked stale when the aggregator read it, but republishes before
+        # the expiry txn runs — the txn re-checks freshness and must not
+        # delete the now-live record (the read->expire race)
+        pa.publish()
+        agg._expire(["a"], clock())
+        assert store.get("fleet/f/member/a") is not None
+        assert "a" in store.get("fleet/f/roster")
+        assert agg.expired_total == 0
+
+    def test_failing_signal_source_is_isolated(self):
+        store = KVStore()
+        pub = FleetPublisher(store, "f", "a", ConnTelemetry(), period_s=0.0)
+        pub.publish()
+
+        def boom(now):
+            raise RuntimeError("api down")
+
+        agg = FleetAggregator(store, "f", ttl_s=10.0,
+                              sources=[CallbackSignal(boom),
+                                       StaticSignal({"ext.spot_usd_per_h": 1.5})])
+        s = agg.aggregate()
+        assert s["fleet.members"] == 1
+        assert s["ext.spot_usd_per_h"] == 1.5
+        assert agg.signal_errors == 1
+
+
+# ---------------------------------------------------------------------------
+# Signals
+# ---------------------------------------------------------------------------
+
+
+class TestSignals:
+    def test_trace_signals_replay_against_the_clock(self):
+        clock = FakeClock()
+        carbon = CarbonIntensitySignal([100.0, 400.0], period_s=60.0, now=clock)
+        spot = SpotPriceSignal([1.0, 5.0, 2.0], period_s=10.0, now=clock)
+        assert carbon.read()["ext.carbon_gco2"] == 100.0
+        clock.advance(61.0)
+        assert carbon.read()["ext.carbon_gco2"] == 400.0
+        assert spot.read()["ext.spot_usd_per_h"] == 1.0  # 61s -> idx 6 % 3 = 0
+        clock.advance(60.0)
+        assert carbon.read()["ext.carbon_gco2"] == 100.0  # wraps
+
+    def test_measure_link_bandwidth_probe(self):
+        bw = measure_link_bandwidth(payload_bytes=1 << 12, n_msgs=8)
+        assert bw > 0
+
+    def test_link_bandwidth_signal_caches_until_refresh(self):
+        clock = FakeClock()
+        values = iter([1e9, 2e9])
+        sig = LinkBandwidthSignal(probe=lambda: next(values),
+                                  refresh_s=30.0, now=clock)
+        s1 = sig.read()
+        assert s1["ext.link_bytes_per_s"] == 1e9
+        assert s1["ext.dcn_s_per_byte"] == pytest.approx(1e-9)
+        clock.advance(10.0)
+        assert sig.read()["ext.link_bytes_per_s"] == 1e9  # cached
+        clock.advance(25.0)
+        assert sig.read()["ext.link_bytes_per_s"] == 2e9  # refreshed
+        assert sig.probes == 2
+
+    def test_link_bandwidth_failed_refresh_serves_cache(self):
+        clock = FakeClock()
+        calls = []
+
+        def probe():
+            calls.append(1)
+            if len(calls) > 1:
+                raise TimeoutError("link flap")
+            return 1e9
+
+        sig = LinkBandwidthSignal(probe=probe, refresh_s=30.0, now=clock)
+        assert sig.read()["ext.link_bytes_per_s"] == 1e9
+        clock.advance(31.0)
+        # refresh probe fails: the cached measurement keeps being served...
+        assert sig.read()["ext.link_bytes_per_s"] == 1e9
+        clock.advance(1.0)
+        sig.read()
+        assert len(calls) == 2  # ...and the probe is NOT retried every tick
+        clock.advance(30.0)
+        sig.read()
+        assert len(calls) == 3  # retried after another refresh window
+
+        # with no cached value at all, the first failure propagates
+        # (aggregator counts it in signal_errors) — and subsequent ticks
+        # refuse CHEAPLY until the refresh window, not by re-probing
+        probes = []
+
+        def bad_probe():
+            probes.append(1)
+            raise TimeoutError("down")
+
+        bad = LinkBandwidthSignal(probe=bad_probe, refresh_s=30.0, now=clock)
+        with pytest.raises(TimeoutError):
+            bad.read()
+        clock.advance(1.0)
+        with pytest.raises(RuntimeError):
+            bad.read()          # within refresh_s: no blocking probe attempt
+        assert len(probes) == 1
+        clock.advance(30.0)
+        with pytest.raises(TimeoutError):
+            bad.read()          # next window: probed again
+        assert len(probes) == 2
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware cost calibration (ROADMAP starter)
+# ---------------------------------------------------------------------------
+
+
+class TestMeshAwareCosts:
+    @pytest.fixture(autouse=True)
+    def _reset(self):
+        # both sides: an earlier test constructing a trainer (which installs
+        # its mesh process-wide) must not skew our baseline asserts
+        from repro.comm import chunnels
+        chunnels.reset_cost_calibration()
+        yield
+        chunnels.reset_cost_calibration()
+
+    def test_live_mesh_width_replaces_nominal_fast(self):
+        from repro.comm.chunnels import (
+            GradHierarchical,
+            calibrate_cost_models,
+            reset_cost_calibration,
+        )
+        ch = GradHierarchical()
+        assert ch.cost_model().dcn_bytes_per_byte == pytest.approx(
+            1.0 / ch.NOMINAL_FAST)
+        mesh = types.SimpleNamespace(axis_names=("pod", "data"),
+                                     shape={"pod": 2, "data": 8})
+        calibrate_cost_models(mesh=mesh)
+        assert ch.cost_model().dcn_bytes_per_byte == pytest.approx(1.0 / 8)
+        reset_cost_calibration()
+        assert ch.cost_model().dcn_bytes_per_byte == pytest.approx(
+            1.0 / ch.NOMINAL_FAST)
+
+    def test_measured_bandwidth_flows_into_objective(self):
+        from repro.core.cost import DEFAULT_OBJECTIVE
+        from repro.comm.chunnels import calibrate_cost_models, calibrated_objective
+
+        clock = FakeClock()
+        sig = LinkBandwidthSignal(probe=lambda: 4e9, now=clock)
+        calibrate_cost_models(signal=sig)
+        obj = calibrated_objective(DEFAULT_OBJECTIVE)
+        assert obj.dcn_s_per_byte == pytest.approx(1.0 / 4e9)
+        assert obj.name.endswith("@measured")
+        # mesh calibration afterwards must not wipe the measured bandwidth
+        mesh = types.SimpleNamespace(axis_names=("pod", "data"),
+                                     shape={"pod": 2, "data": 2})
+        cal = calibrate_cost_models(mesh=mesh)
+        assert cal.n_fast == 2 and cal.dcn_bytes_per_s == pytest.approx(4e9)
+
+    def test_uncalibrated_objective_passes_through(self):
+        from repro.core.cost import LATENCY_FIRST
+        from repro.comm.chunnels import calibrated_objective
+        assert calibrated_objective(LATENCY_FIRST) is LATENCY_FIRST
+
+
+# ---------------------------------------------------------------------------
+# Fleet-wide switching (the acceptance scenario, deterministic clock)
+# ---------------------------------------------------------------------------
+
+
+def _mk_fleet(n=3, *, clock, store=None, only_server_router=frozenset()):
+    """n members over §7.3 routing stacks (no live traffic — load is driven
+    synthetically through each member's telemetry)."""
+    store = store or KVStore()
+    fabric = Fabric()
+    members = []
+    for i in range(n):
+        ep = fabric.register(f"fcli{i}")
+        if i in only_server_router:
+            st = make_stack(ServerRouterChunnel(router_addr="router"),
+                            AddressedTransport(ep))
+        else:
+            st = routing_stack(ep, ["b0", "b1"], "router", prefer="server")
+        h = LockedConn(st.preferred())
+        h.telemetry = ConnTelemetry(now=clock)
+        h.telemetry.bind_reconfig(h.stats)
+        pub = FleetPublisher(store, "kv", f"cli{i}", h.telemetry,
+                             period_s=0.0, now=clock)
+        m = FleetMember(store, "kv", f"cli{i}", h, st, publisher=pub)
+        m.join()
+        members.append(m)
+    return store, members
+
+
+def _drive(members, clock, agg, ctl, *, k_sends, n_ticks, dt=0.05):
+    """Advance the fleet n_ticks control intervals at k_sends ops per member
+    per interval (member qps = k_sends / dt)."""
+    out = []
+    for _ in range(n_ticks):
+        clock.advance(dt)
+        for m in members:
+            for _ in range(k_sends):
+                m.handle.telemetry.record_send(1, 100, 0.001)
+            m.poll(clock())
+        out.append(ctl.tick(agg.aggregate(clock())))
+    return out
+
+
+class TestFleetWideSwitch:
+    def _controller(self, store, members, clock, *, params=None, sources=()):
+        agg = FleetAggregator(store, "kv", ttl_s=1.0, now=clock,
+                              sources=list(sources))
+        ctl = fleet_controller(
+            store, "kv", members[0].stack,
+            policy="kv_fleet_adaptive",
+            policy_params={"fleet_high_qps": 180.0, "fleet_low_qps": 110.0,
+                           "hold": 2, **(params or {})},
+            pump=lambda: [m.poll(clock()) for m in members],
+            cooldown_s=0.0, now=clock)
+        return agg, ctl
+
+    def test_aggregate_crossing_switches_whole_fleet_in_one_epoch(self):
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock)
+        agg, ctl = self._controller(store, members, clock)
+
+        # low: 20 qps/member, 60 aggregate — nothing fires
+        _drive(members, clock, agg, ctl, k_sends=1, n_ticks=3)
+        assert ctl.counts()["fired"] == 0
+        assert store.get(f"{fleet_conn_id('kv')}/stack")["epoch"] == 1
+
+        # high: 80 qps/member — EVERY member is far below the 150 qps a
+        # per-client policy needs, but the aggregate (240) crosses 180
+        decisions = _drive(members, clock, agg, ctl, k_sends=4, n_ticks=4)
+        fired = [d for d in decisions if d.fired]
+        assert len(fired) == 1 and fired[0].committed
+        assert fired[0].rule == "fleet-high-load->client-shard"
+        snap = fired[0].snapshot
+        assert snap["fleet.offered_qps"] > 180.0
+        assert max(snap["fleet.member_qps"].values()) < 150.0
+
+        # fleet-wide, single epoch: every member runs the same stack at the
+        # same committed epoch, having switched exactly once
+        cur = store.get(f"{fleet_conn_id('kv')}/stack")
+        assert cur["epoch"] == 2
+        for m in members:
+            assert repr(m.handle.stack).startswith("ClientShard")
+            assert m.epoch == 2
+            assert m.handle.stats.switches == 1
+
+        # drain: aggregate below the low-water mark moves everyone back
+        decisions = _drive(members, clock, agg, ctl, k_sends=1, n_ticks=4)
+        assert [d for d in decisions if d.fired and d.committed]
+        cur = store.get(f"{fleet_conn_id('kv')}/stack")
+        assert cur["epoch"] == 3
+        for m in members:
+            assert repr(m.handle.stack).startswith("ServerRouter")
+            assert m.handle.stats.switches == 2
+
+    def test_multi_source_predicate_combines_aggregate_and_signal(self):
+        """A spot-price spike (external SignalSource) while aggregate load is
+        below the high-water mark consolidates the fleet behind the router —
+        neither signal alone arms the rule."""
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock)
+        spot = SpotPriceSignal([0.5, 5.0], period_s=100.0, now=clock)
+        agg, ctl = self._controller(
+            store, members, clock,
+            params={"fleet_high_qps": 200.0, "spot_cap_usd_per_h": 3.0},
+            sources=[spot])
+
+        # get the fleet onto ClientShard first (high load, cheap spot)
+        _drive(members, clock, agg, ctl, k_sends=4, n_ticks=4)  # 240 qps agg
+        assert all(repr(m.handle.stack).startswith("ClientShard")
+                   for m in members)
+
+        # mid load (180 < 200) + cheap spot: nothing fires
+        before = ctl.counts()["fired"]
+        _drive(members, clock, agg, ctl, k_sends=3, n_ticks=3)
+        assert ctl.counts()["fired"] == before
+
+        # same mid load, spot spikes over the cap -> the multi-source rule
+        clock.advance(100.0 - clock() % 100.0)  # move the trace to 5.0 $/h
+        decisions = _drive(members, clock, agg, ctl, k_sends=3, n_ticks=3)
+        fired = [d for d in decisions if d.fired and d.committed]
+        assert fired and fired[0].rule == "fleet-spot-spike->server-router"
+        assert fired[0].snapshot["ext.spot_usd_per_h"] == 5.0
+        assert all(repr(m.handle.stack).startswith("ServerRouter")
+                   for m in members)
+
+    def test_member_without_target_vetoes_fleet_transition(self):
+        """One member only ever offered ServerRouter: the fleet proposal to
+        ClientShard aborts for EVERYONE (§4.2 at fleet scope) — no member is
+        forced onto a stack it cannot run, and no member switches alone."""
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock, only_server_router={2})
+        agg, ctl = self._controller(store, members, clock)
+        decisions = _drive(members, clock, agg, ctl, k_sends=4, n_ticks=4)
+        refused = [d for d in decisions if d.fired]
+        assert refused and not any(d.committed for d in refused)
+        assert store.get(f"{fleet_conn_id('kv')}/stack")["epoch"] == 1
+        assert all(repr(m.handle.stack).startswith("ServerRouter")
+                   for m in members)
+
+    def test_late_joiner_adopts_committed_stack(self):
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock)
+        agg, ctl = self._controller(store, members, clock)
+        _drive(members, clock, agg, ctl, k_sends=4, n_ticks=4)
+        assert store.get(f"{fleet_conn_id('kv')}/stack")["epoch"] == 2
+
+        fabric = Fabric()
+        ep = fabric.register("late")
+        st = routing_stack(ep, ["b0", "b1"], "router", prefer="server")
+        h = LockedConn(st.preferred())
+        late = FleetMember(store, "kv", "late", h, st)
+        res = late.join()
+        assert not res.proposed and res.epoch == 2
+        # §5.3a: recovered (and adopted) the committed stack without having
+        # participated in the negotiation that picked it
+        assert repr(h.stack).startswith("ClientShard")
+        assert late.epoch == 2
+
+    def test_crashed_member_is_evicted_from_commit_plane_and_can_rejoin(self):
+        """A member that crashes without leave() ages out of BOTH planes:
+        aggregation (roster/record) and the rendezvous membership map — so
+        its missing ack cannot block every future fleet transition. If it
+        comes back, its next poll() re-joins."""
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock)
+        alive, crashed = members[:2], members[2]
+        agg, ctl = self._controller(store, alive, clock)
+
+        # everyone heartbeats once, then cli2 goes silent past the TTL
+        for m in members:
+            m.poll(clock())
+        for _ in range(30):   # ttl_s=1.0, dt=0.05: cli2 ages out
+            clock.advance(0.05)
+            for m in alive:
+                m.poll(clock())
+            agg.aggregate(clock())
+        rdv = store.get(f"{fleet_conn_id('kv')}/members")
+        assert sorted(rdv) == ["cli0", "cli1"]
+        assert store.get("fleet/kv/member/cli2") is None
+
+        # the surviving fleet can still commit a transition (unanimous acks
+        # no longer include the dead member): 100 qps each, 200 aggregate
+        decisions = _drive(alive, clock, agg, ctl, k_sends=5, n_ticks=4)
+        assert [d for d in decisions if d.fired and d.committed]
+        assert store.get(f"{fleet_conn_id('kv')}/stack")["epoch"] == 2
+        assert all(repr(m.handle.stack).startswith("ClientShard")
+                   for m in alive)
+
+        # revival: the evicted member's next poll re-joins and adopts the
+        # committed stack it missed
+        crashed.poll(clock())
+        rdv = store.get(f"{fleet_conn_id('kv')}/members")
+        assert "cli2" in rdv
+        assert repr(crashed.handle.stack).startswith("ClientShard")
+        assert crashed.epoch == 2
+
+    def test_failed_switch_attempts_are_backed_off(self):
+        """A refused transition must not become a propose/abort storm: after
+        a failed attempt, no new proposal is published until retry_backoff_s
+        passes, even though the rule stays armed every tick."""
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock, only_server_router={2})
+        agg = FleetAggregator(store, "kv", ttl_s=10.0, now=clock)
+        ctl = fleet_controller(
+            store, "kv", members[0].stack,
+            policy="kv_fleet_adaptive",
+            policy_params={"fleet_high_qps": 180.0, "fleet_low_qps": 110.0,
+                           "hold": 2},
+            pump=lambda: [m.poll(clock()) for m in members],
+            retry_backoff_s=3600.0,   # effectively: one attempt only
+            cooldown_s=0.0, now=clock)
+        before = store.version(f"{fleet_conn_id('kv')}/proposal")
+        decisions = _drive(members, clock, agg, ctl, k_sends=4, n_ticks=6)
+        # ONE real attempt (propose + 3 votes + aborting try_commit = 5
+        # proposal-version bumps), then pure backoff — not one per armed tick
+        bumps = store.version(f"{fleet_conn_id('kv')}/proposal") - before
+        assert bumps <= 6, bumps
+        assert ctl.counts()["committed"] == 0
+        # the rule stayed armed and kept firing; only the proposal was damped
+        assert sum(d.fired for d in decisions) > 1
+
+    def test_unresolvable_commit_keeps_member_epoch_behind(self):
+        """A committed fingerprint a member cannot run must not be silently
+        marked adopted: the epoch stays behind (the divergence is visible in
+        ``transitions``), it is logged once — and a later resolvable commit
+        is still picked up."""
+        clock = FakeClock()
+        store, members = _mk_fleet(1, clock=clock)
+        m = members[0]
+        assert not m._adopt("Bogus(caps)<x->y>", 5)
+        assert m.epoch == 1  # still the join epoch
+        assert m.transitions == [
+            {"epoch": 5, "fp": "Bogus(caps)<x->y>", "applied": False}]
+        assert not m._adopt("Bogus(caps)<x->y>", 5)
+        assert len(m.transitions) == 1  # logged once per epoch
+        # a later epoch with a fingerprint we CAN run is adopted normally
+        target = m.stack.options()[1]
+        assert m._adopt(target.fingerprint(), 6)
+        assert m.epoch == 6
+        assert repr(m.handle.stack).startswith("ClientShard")
+
+    def test_concurrent_proposal_reports_uncommitted(self):
+        clock = FakeClock()
+        store, members = _mk_fleet(3, clock=clock)
+        agg, ctl = self._controller(store, members, clock)
+        # park a foreign proposal in flight: the controller's own proposal
+        # must fail cleanly (refused), not crash or double-propose
+        rendezvous.propose_transition(
+            store, fleet_conn_id("kv"), "someone-else", "fp-x",
+            [{"name": "X", "caps": []}])
+        decisions = _drive(members, clock, agg, ctl, k_sends=4, n_ticks=3)
+        fired = [d for d in decisions if d.fired]
+        assert fired and not any(d.committed for d in fired)
+        assert all(d.reason == "refused" for d in fired)
