@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # One-stop verification entrypoint (CI + pre-PR):
 #   1. compat feature report  — fails if the compat layer cannot bind on this JAX
-#   2. tier-1 test suite      — pyproject pythonpath makes the prefix optional,
+#   2. static lint            — repro.lint --strict: stack verification,
+#                               concurrency analysis, compat-boundary + hygiene
+#                               over src/repro (docs/architecture.md §7)
+#   3. tier-1 test suite      — pyproject pythonpath makes the prefix optional,
 #                               but we keep it so the script also works on
 #                               pytest < 7 installs
-#   3. benchmark smoke pass   — import + mesh/shard_map sanity for the bench
+#   4. benchmark smoke pass   — import + mesh/shard_map sanity for the bench
 #                               tier, plus the controller-driven reconfigure
 #                               scenario (telemetry -> policy -> switch) run
 #                               headless so the close-the-loop path is tier-1
@@ -14,6 +17,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== repro.compat report =="
 python -m repro.compat
+
+echo "== repro.lint (strict) =="
+python -m repro.lint --strict --stacks --json benchmarks/out/lint_report.json
 
 echo "== tier-1 tests =="
 python -m pytest -q

@@ -64,22 +64,28 @@ class Fabric:
             self._eps.pop(addr, None)
 
     def set_link(self, src: str, dst: str, model: LinkModel) -> None:
-        self._links[(src, dst)] = model
+        with self._lock:
+            self._links[(src, dst)] = model
 
     def _model(self, src: str, dst: str) -> LinkModel:
-        return self._links.get((src, dst), self._default)
+        with self._lock:
+            return self._links.get((src, dst), self._default)
 
     def send(self, src: str, dst: str, msg: Any) -> None:
         m = self._model(src, dst)
+        size = _approx_size(msg)  # recurses over the payload: not under lock
         with self._lock:
             if m.loss and self._rng.random() < m.loss:
                 return  # best-effort: dropped
             ep = self._eps.get(dst)
             self.sent_msgs += 1
-            self.sent_bytes += _approx_size(msg)
+            self.sent_bytes += size
+            # rng draw inside the lock: Random() is shared across senders and
+            # an unguarded draw can repeat/skip states under contention
+            jitter = self._rng.random() if m.jitter_s else 0.0
         if ep is None:
             return  # unroutable: best-effort
-        delay = m.latency_s + (self._rng.random() * m.jitter_s if m.jitter_s else 0.0)
+        delay = m.latency_s + jitter * m.jitter_s
         if delay > 0:
             t = threading.Timer(delay, ep.inbox.put, args=((src, msg),))
             t.daemon = True

@@ -138,11 +138,13 @@ class LockedConn(ConnHandle):
         msgs = msgs if isinstance(msgs, (list, tuple)) else list(msgs)
         t0 = time.perf_counter()
         with self._lock:
+            # lint: allow[blocking-under-lock] the mechanism: every data op runs under the switch-point mutex (§6.2) — that serialization IS LockedConn's measured cost
             self.dp.send(msgs)
         self._record_send(msgs, t0)
 
     def recv(self, buf, timeout=None):
         with self._lock:
+            # lint: allow[blocking-under-lock] the mechanism: recv blocks under the switch-point mutex by design (§6.2); BarrierConn is the lock-free alternative
             n = self.dp.recv(buf, timeout)
         self._record_recv(buf, n)
         return n
@@ -150,6 +152,7 @@ class LockedConn(ConnHandle):
     def reconfigure(self, new_stack, coordinate=None):
         t0 = time.perf_counter()
         with self._lock:  # switch point = lock release
+            # lint: allow[blocking-under-lock] §6.2: the 2PC coordinate() callback MUST run inside the switch point — negotiation uses the connection, so the lock protects it
             if coordinate is not None and not coordinate():
                 return False
             self._do_swap(new_stack)

@@ -71,6 +71,7 @@ class KVStore:
         """Run fn against a serializable view; commits atomically."""
         with self._lock:
             txn = Txn(self)
+            # lint: allow[blocking-under-lock] pessimistic discipline (module docstring): fn is a tiny control-plane txn body (join/vote/commit) and MUST run serialized under the store lock
             out = fn(txn)
             self._apply(txn)
             return out
@@ -110,8 +111,7 @@ class KVStore:
                     raise
                 time.sleep(backoff_s * (attempt + 1))
 
-    def _apply(self, txn: "Txn") -> None:
-        # caller holds self._lock
+    def _apply(self, txn: "Txn") -> None:  # lint: allow[unguarded-attr] every caller (transact/try_transact) holds self._lock; RLock makes taking it here redundant, not wrong — kept out of the hot commit path
         for k, v in txn.writes.items():
             self._data[k] = v
             self._ver[k] = self._ver.get(k, 0) + 1

@@ -24,6 +24,7 @@ from repro.fleet.signals import (
     CallbackSignal,
     CarbonIntensitySignal,
     LinkBandwidthSignal,
+    SignalError,
     SignalSource,
     SpotPriceSignal,
     StaticSignal,
@@ -32,7 +33,7 @@ from repro.fleet.signals import (
 
 __all__ = [
     "CallbackSignal", "CarbonIntensitySignal", "FleetAggregator",
-    "FleetMember", "FleetPublisher", "LinkBandwidthSignal", "SignalSource",
-    "SpotPriceSignal", "StaticSignal", "fleet_conn_id", "fleet_controller",
-    "measure_link_bandwidth", "member_key", "roster_key",
+    "FleetMember", "FleetPublisher", "LinkBandwidthSignal", "SignalError",
+    "SignalSource", "SpotPriceSignal", "StaticSignal", "fleet_conn_id",
+    "fleet_controller", "measure_link_bandwidth", "member_key", "roster_key",
 ]

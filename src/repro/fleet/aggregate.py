@@ -32,12 +32,15 @@ not take the control loop down with it.
 """
 from __future__ import annotations
 
+import logging
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.rendezvous import KVStore
 from repro.fleet.publish import fleet_conn_id, member_key, roster_key
 from repro.fleet.signals import SignalSource
+
+log = logging.getLogger(__name__)
 
 
 class FleetAggregator:
@@ -166,7 +169,11 @@ class FleetAggregator:
         for src in self.sources:
             try:
                 out.update(src.read(now) or {})
-            except Exception:
-                # an external feed must not take the control loop down
+            except Exception as e:
+                # an external feed must not take the control loop down — but
+                # the failure stays diagnosable: counted in signal_errors AND
+                # logged at DEBUG (the compat probe pattern), never swallowed
+                log.debug("signal source %r failed: %s",
+                          getattr(src, "name", "?"), e)
                 self.signal_errors += 1
         return out

@@ -14,10 +14,21 @@ on its own cadence (see ``LinkBandwidthSignal.refresh_s``).
 """
 from __future__ import annotations
 
+import logging
 import time
 from typing import Callable, Dict, Optional, Sequence
 
 from repro.core.fabric import Fabric
+
+log = logging.getLogger(__name__)
+
+
+class SignalError(RuntimeError):
+    """A signal source could not produce a value this tick.
+
+    Typed so the aggregator (and tests) can tell an expected source outage
+    from a programming error; carries the probe failure as ``__cause__`` when
+    one triggered it."""
 
 
 class SignalSource:
@@ -168,14 +179,21 @@ class LinkBandwidthSignal(SignalSource):
             try:
                 self._bytes_per_s = float(self.probe())
                 self.probes += 1
-            except Exception:
+            except Exception as e:
+                # the compat probe pattern (jaxapi._warn_probe_once): a
+                # failed probe is logged at DEBUG, never swallowed silently.
+                # With a cached measurement we keep serving it; without one
+                # the typed error below tells the aggregator why.
+                log.debug("link bandwidth probe failed: %s", e)
                 if self._bytes_per_s is None:
-                    raise
+                    raise SignalError(
+                        f"bandwidth probe failed with no cached value: {e}"
+                    ) from e
         bw = self._bytes_per_s
         if not bw:
             # no usable measurement yet (first probe failed, or measured 0):
             # refuse cheaply until the next refresh window instead of
             # emitting None/inf values into the snapshot
-            raise RuntimeError("bandwidth probe has not succeeded yet")
+            raise SignalError("bandwidth probe has not succeeded yet")
         return {"ext.link_bytes_per_s": bw,
                 "ext.dcn_s_per_byte": 1.0 / bw}

@@ -1,0 +1,25 @@
+"""repro.lint — static verification for the reconfigurable network stack.
+
+Three analyzer families over ``src/repro`` (see docs/architecture.md §7):
+
+  stack verifier   migration-hook signatures (AST) + capability closure,
+                   swap-name alignment, dead Select options and semantic
+                   ordering on real ``Stack`` objects (``verify_stack``)
+  concurrency      lock graphs, blocking calls under a held lock, unguarded
+                   shared-attribute writes
+  compat/hygiene   version-gated JAX symbols outside src/repro/compat/,
+                   silent exception swallows, mutable default args
+
+CLI: ``python -m repro.lint [paths] [--strict] [--stacks] [--json OUT]``.
+Suppress a finding in place with ``# lint: allow[rule] reason`` (the reason
+is mandatory); adopt legacy debt with ``--write-baseline``/``--baseline``.
+"""
+from .engine import RULES, lint_module, lint_paths, lint_sources, Module
+from .findings import Finding, PragmaMap, load_baseline, write_baseline
+from .rules_stack import builtin_stacks, verify_stack
+
+__all__ = [
+    "RULES", "Finding", "Module", "PragmaMap", "builtin_stacks",
+    "lint_module", "lint_paths", "lint_sources", "load_baseline",
+    "verify_stack", "write_baseline",
+]

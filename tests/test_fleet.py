@@ -18,6 +18,7 @@ from repro.fleet import (
     FleetMember,
     FleetPublisher,
     LinkBandwidthSignal,
+    SignalError,
     SpotPriceSignal,
     StaticSignal,
     fleet_conn_id,
@@ -397,14 +398,15 @@ class TestSignals:
             raise TimeoutError("down")
 
         bad = LinkBandwidthSignal(probe=bad_probe, refresh_s=30.0, now=clock)
-        with pytest.raises(TimeoutError):
+        with pytest.raises(SignalError) as ei:
             bad.read()
+        assert isinstance(ei.value.__cause__, TimeoutError)  # probe chained
         clock.advance(1.0)
-        with pytest.raises(RuntimeError):
+        with pytest.raises(SignalError):
             bad.read()          # within refresh_s: no blocking probe attempt
         assert len(probes) == 1
         clock.advance(30.0)
-        with pytest.raises(TimeoutError):
+        with pytest.raises(SignalError):
             bad.read()          # next window: probed again
         assert len(probes) == 2
 
