@@ -98,6 +98,21 @@ def main() -> None:
         dt = timeit(eager, warmup=3, iters=50)
         emit(f"overhead_eager_{n}chunnels", dt * 1e6, "")
 
+    # host-fabric split accounting: sent vs delivered vs dropped counters
+    # (lossy + unroutable traffic no longer inflates "sent == delivered")
+    from repro.core.fabric import Fabric, LinkModel
+
+    fab = Fabric(default_link=LinkModel(loss=0.1), seed=0)
+    a = fab.register("ovh-a")
+    fab.register("ovh-b")
+    a.send_batch("ovh-b", [b"x" * 64] * 1000)
+    a.send_batch("nowhere", [b"y" * 64] * 10)
+    c = fab.counters.snapshot()
+    emit("overhead_fabric_counters", 0.0,
+         f"sent={c['sent']};delivered={c['delivered']};"
+         f"dropped_loss={c['dropped_loss']};"
+         f"dropped_unroutable={c['dropped_unroutable']}")
+
 
 if __name__ == "__main__":
     main()

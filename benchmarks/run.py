@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Fig 9  bench_kv_latency    full stack vs inlined baselines
   Fig 10 bench_reconfigure   lock vs barrier reconfiguration
   (TPU)  bench_collectives   gradient-transport Select collective profile
+  (§8)   bench_dataplane     batched data plane msgs/s vs per-message baseline
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ import time
 import traceback
 
 MODULES = [
+    "benchmarks.bench_dataplane",
     "benchmarks.bench_overhead",
     "benchmarks.bench_reconfigure",
     "benchmarks.bench_kv_latency",
@@ -63,6 +65,16 @@ def smoke() -> None:
     assert "ClientShard" in res["switches"][0]["target"], res["switches"][0]
     print(f"smoke_controller_kv,{res['blip_s'] * 1e6:.2f},"
           f"switches={len(res['switches'])};policy={res['policy']}")
+
+    # batched data plane: scaled-down throughput pass (asserts the ≥10x
+    # batch=64 speedup over the per-message baseline internally and writes
+    # benchmarks/out/dataplane.json — a CI artifact)
+    from benchmarks.bench_dataplane import run as run_dataplane
+
+    dp = run_dataplane(smoke=True)
+    print("smoke_dataplane,0.00,"
+          f"speedup_batch64={dp['speedup_batch64']:.1f}x;"
+          f"default_b64_msgs_per_s={dp['default']['64']['msgs_per_s']:.0f}")
 
     # fleet signal plane: aggregate-driven switch, one rendezvous epoch for
     # the whole fleet (asserts the acceptance shape internally and writes

@@ -27,4 +27,9 @@ python -m pytest -q
 echo "== benchmark smoke =="
 python -m benchmarks.run --smoke
 
+echo "== data-plane throughput smoke =="
+# scaled-down batched-vs-per-message sweep; asserts the >=10x batch=64
+# speedup and writes benchmarks/out/dataplane.json (a CI artifact)
+python -m benchmarks.bench_dataplane --smoke
+
 echo "verify.sh: all green"

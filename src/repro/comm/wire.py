@@ -1,0 +1,229 @@
+"""Fused compressed wire path: the host-plane chunnel that makes
+``use_kernel=True`` real (docs/architecture.md §8, ROADMAP direction 1).
+
+The gradient-compression step chunnel models its int8 wire ratio; this module
+actually SHIPS the compressed bytes over the host fabric. The whole batch of
+float messages is flattened host-side, then one jitted device program fuses
+quantize → pack-to-bytes (int8 payload + bitcast fp32 scales into a single
+uint8 vector); the receive side runs the inverse unpack → dequantize in one
+program and splits back into per-message arrays. ``use_kernel=True`` routes
+the quantize/dequantize through the Pallas TPU kernels in
+``repro.kernels.quantize`` (interpret mode off-TPU); ``use_kernel=False`` is
+the pure-jnp oracle — tier-1 tests assert the two produce identical wire
+bytes in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax import numpy as jnp
+
+from repro.comm.compress import int8_wire_ratio
+from repro.core.capability import CapabilitySet
+from repro.core.chunnel import Chunnel, Datapath, WireType
+from repro.core.cost import CostModel
+from repro.kernels.quantize.ops import INTERPRET
+from repro.kernels.quantize.quantize import dequantize_blocks, quantize_blocks
+
+TENSOR = WireType.of("tensor", dtype="f32")
+BYTES = WireType.of("bytes")
+
+# blob ids only disambiguate concurrent reassembly on one receiving datapath;
+# process-global uniqueness is plenty
+_BLOB_IDS = itertools.count(1)
+_BLOB_LOCK = threading.Lock()
+
+
+def _next_blob_id() -> int:
+    with _BLOB_LOCK:
+        return next(_BLOB_IDS)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel"))
+def _fused_encode(x2d: jnp.ndarray, *, block: int, use_kernel: bool) -> jnp.ndarray:
+    """(n_blocks, block) f32 -> one uint8 vector: int8 payload then bitcast
+    fp32 scales. One device program for the whole batch."""
+    if use_kernel:
+        q, s = quantize_blocks(x2d, block=block, interpret=INTERPRET)
+    else:
+        amax = jnp.max(jnp.abs(x2d), axis=1)
+        s = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(x2d / s[:, None]), -127, 127).astype(jnp.int8)
+    qb = jax.lax.bitcast_convert_type(q, jnp.uint8).reshape(-1)
+    sb = jax.lax.bitcast_convert_type(s, jnp.uint8).reshape(-1)
+    return jnp.concatenate([qb, sb])
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "block", "use_kernel"))
+def _fused_decode(packed: jnp.ndarray, *, n_blocks: int, block: int,
+                  use_kernel: bool) -> jnp.ndarray:
+    """Inverse of ``_fused_encode``: uint8 vector -> flat f32 of length
+    n_blocks * block, again one device program."""
+    qb = packed[: n_blocks * block].reshape(n_blocks, block)
+    q = jax.lax.bitcast_convert_type(qb, jnp.int8)
+    sb = packed[n_blocks * block:].reshape(n_blocks, 4)
+    s = jax.lax.bitcast_convert_type(sb, jnp.float32)
+    if use_kernel:
+        out = dequantize_blocks(q, s, block=block, interpret=INTERPRET)
+    else:
+        out = q.astype(jnp.float32) * s[:, None]
+    return out.reshape(-1)
+
+
+def encode_batch(msgs: List[Any], *, block: int = 256, use_kernel: bool = True,
+                 chunk_bytes: int = 1 << 16) -> List[dict]:
+    """Batch of float arrays -> wire frames. One host concat, one fused
+    device call, then chunking into ``chunk_bytes`` fabric frames."""
+    arrs = [np.asarray(m, dtype=np.float32) for m in msgs]
+    shapes = [a.shape for a in arrs]
+    total = int(sum(a.size for a in arrs))
+    if total:
+        flat = np.concatenate([a.reshape(-1) for a in arrs])
+        pad = (-total) % block
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        x2d = flat.reshape(-1, block)
+        packed = _fused_encode(jnp.asarray(x2d), block=block, use_kernel=use_kernel)
+        payload = np.asarray(packed, dtype=np.uint8).tobytes()
+        n_blocks = x2d.shape[0]
+    else:
+        payload = b""
+        n_blocks = 0
+    hdr = {"shapes": [tuple(s) for s in shapes], "block": block,
+           "n_blocks": n_blocks}
+    blob_id = _next_blob_id()
+    n_chunks = max(1, -(-len(payload) // chunk_bytes))
+    return [{"_wire": (blob_id, k, n_chunks),
+             "hdr": hdr if k == 0 else None,
+             "data": payload[k * chunk_bytes:(k + 1) * chunk_bytes]}
+            for k in range(n_chunks)]
+
+
+def decode_blob(payload: bytes, hdr: dict, *, use_kernel: bool = True) -> List[np.ndarray]:
+    """Reassembled payload + header -> the original batch (dequantized)."""
+    shapes = hdr["shapes"]
+    n_blocks, block = hdr["n_blocks"], hdr["block"]
+    if n_blocks:
+        packed = jnp.asarray(np.frombuffer(payload, dtype=np.uint8))
+        flat = np.asarray(_fused_decode(packed, n_blocks=n_blocks, block=block,
+                                        use_kernel=use_kernel))
+    else:
+        flat = np.zeros((0,), dtype=np.float32)
+    out: List[np.ndarray] = []
+    off = 0
+    for shp in shapes:
+        size = int(np.prod(shp)) if shp else 1
+        out.append(flat[off:off + size].reshape(shp))
+        off += size
+    return out
+
+
+@dataclass
+class CompressChunnel(Chunnel):
+    """Host-plane int8 compressed wire format (exact-match capability: every
+    peer must speak it). ``use_kernel=True`` is the Pallas path (interpret
+    mode off-TPU); ``False`` the jnp oracle — same bytes either way."""
+
+    block: int = 256
+    use_kernel: bool = True
+    chunk_bytes: int = 1 << 16
+
+    upper_type = TENSOR
+    lower_type = BYTES
+    multilateral = True
+
+    @property
+    def name(self) -> str:
+        return f"CompressWire[b{self.block}]"
+
+    def capabilities(self) -> CapabilitySet:
+        return CapabilitySet.exact(f"wire:int8-blockq{self.block}")
+
+    def cost_model(self) -> CostModel:
+        return CostModel(op_latency_s=5e-4,
+                         dcn_bytes_per_byte=int8_wire_ratio(self.block),
+                         switch_blip_s=1e-3)
+
+    def connect_wrap(self, inner: Optional[Datapath]) -> Datapath:
+        return _CompressDP(self, inner)
+
+
+class _CompressDP(Datapath):
+    """Fused-wire datapath: encode the whole batch in one device call, chunk,
+    and reassemble/decode on the receive side."""
+
+    MAX_PARTIAL = 64  # bound reassembly state under frame loss
+
+    def __init__(self, ch: CompressChunnel, inner: Optional[Datapath]):
+        self.ch = ch
+        self.inner = inner
+        self._partial: Dict[int, dict] = {}
+        self._partial_order: deque = deque()
+        self._ready: deque = deque()
+
+    def send(self, msgs):
+        msgs = list(msgs)
+        if not msgs:
+            return
+        frames = encode_batch(msgs, block=self.ch.block,
+                              use_kernel=self.ch.use_kernel,
+                              chunk_bytes=self.ch.chunk_bytes)
+        if self.inner is not None:
+            self.inner.send(frames)
+
+    def recv(self, buf, timeout=None):
+        n_out = self._drain(buf, 0)
+        if self.inner is None:
+            return n_out
+        tmp: List[Any] = [None] * max(len(buf), 8)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while n_out < len(buf):
+            if n_out:
+                t: Optional[float] = 0.0  # drain-only once delivering
+            elif deadline is None:
+                t = None
+            else:
+                t = deadline - time.monotonic()
+                if t <= 0:
+                    break  # partial blobs are kept for the next call
+            got = self.inner.recv(tmp, t)
+            if not got:
+                break
+            for k in range(got):  # reassemble chunked blobs
+                self._ingest(tmp[k])
+            n_out = self._drain(buf, n_out)
+        return n_out
+
+    def _ingest(self, frame) -> None:
+        if not (isinstance(frame, dict) and "_wire" in frame):
+            return
+        blob_id, k, n_chunks = frame["_wire"]
+        st = self._partial.get(blob_id)
+        if st is None:
+            st = {"hdr": None, "chunks": {}, "n": n_chunks}
+            self._partial[blob_id] = st
+            self._partial_order.append(blob_id)
+            while len(self._partial_order) > self.MAX_PARTIAL:
+                self._partial.pop(self._partial_order.popleft(), None)
+        if frame.get("hdr") is not None:
+            st["hdr"] = frame["hdr"]
+        st["chunks"][k] = frame["data"]
+        if st["hdr"] is not None and len(st["chunks"]) == st["n"]:
+            self._partial.pop(blob_id, None)
+            payload = b"".join(st["chunks"][i] for i in range(st["n"]))
+            self._ready.extend(decode_blob(payload, st["hdr"],
+                                           use_kernel=self.ch.use_kernel))
+
+    def _drain(self, buf, n_out: int) -> int:
+        while n_out < len(buf) and self._ready:
+            buf[n_out] = self._ready.popleft()
+            n_out += 1
+        return n_out

@@ -53,7 +53,17 @@ def types_match(a: WireType, b: WireType) -> bool:
 
 
 class Datapath(abc.ABC):
-    """A live connection endpoint (the paper's ChunnelDatapath)."""
+    """A live connection endpoint (the paper's ChunnelDatapath).
+
+    The contract is batch-aware (docs/architecture.md §8): ``send`` takes the
+    WHOLE batch and implementations must transform/forward it per call — one
+    inner ``send``, one fabric ``send_batch``, one device program — never a
+    per-element loop of singleton sends. Per-message transforms are lifted to
+    the batch contract only through the explicit :func:`per_message` adapter
+    (the one sanctioned per-element loop; ``repro.lint``'s
+    ``per-message-hot-path`` rule flags hand-written ones). ``recv`` fills
+    ``buf`` and may block up to ``timeout`` for the FIRST message only — it
+    drains what is available rather than waiting for a full buffer."""
 
     @abc.abstractmethod
     def send(self, msgs: Iterable[Any]) -> None: ...
@@ -64,6 +74,20 @@ class Datapath(abc.ABC):
 
     def close(self) -> None:
         pass
+
+
+def per_message(fn: Any) -> Any:
+    """Lift a per-message transform to the batch contract — the explicit
+    escape hatch for transforms that genuinely cannot vectorize. This is the
+    only sanctioned per-element loop on a Datapath hot path; the
+    ``per-message-hot-path`` lint rule exists to flag hand-written ones."""
+
+    def _batch(msgs: list) -> list:
+        return [fn(m) for m in msgs]
+
+    _batch.per_message = True  # type: ignore[attr-defined]
+    _batch.__wrapped__ = fn  # type: ignore[attr-defined]
+    return _batch
 
 
 class Chunnel(abc.ABC):
@@ -109,7 +133,12 @@ class Chunnel(abc.ABC):
 
 @dataclass
 class FnChunnel(Chunnel):
-    """Convenience: build a transform chunnel from send/recv functions."""
+    """Convenience: build a transform chunnel from send/recv functions.
+
+    ``on_send``/``on_recv`` are per-message transforms, lifted to the batch
+    contract through :func:`per_message`. ``on_send_batch``/``on_recv_batch``
+    take and return the whole list in one call and win when both are given —
+    supply these for anything that can amortize work across the batch."""
 
     fn_name: str = "FnChunnel"
     on_send: Any = None
@@ -119,6 +148,8 @@ class FnChunnel(Chunnel):
     caps: Optional[CapabilitySet] = None
     multilateral_: bool = False
     cost: Optional[CostModel] = None
+    on_send_batch: Any = None
+    on_recv_batch: Any = None
 
     def __post_init__(self):
         self.upper_type = self.upper
@@ -143,9 +174,15 @@ class _FnDatapath(Datapath):
     def __init__(self, ch: FnChunnel, inner: Optional[Datapath]):
         self.ch = ch
         self.inner = inner
+        self._send_batch = ch.on_send_batch or (
+            per_message(ch.on_send) if ch.on_send else None)
+        self._recv_batch = ch.on_recv_batch or (
+            per_message(ch.on_recv) if ch.on_recv else None)
 
     def send(self, msgs):
-        out = [self.ch.on_send(m) if self.ch.on_send else m for m in msgs]
+        if not isinstance(msgs, list):
+            msgs = list(msgs)
+        out = self._send_batch(msgs) if self._send_batch else msgs
         if self.inner is not None:
             self.inner.send(out)
 
@@ -153,7 +190,8 @@ class _FnDatapath(Datapath):
         if self.inner is None:
             return 0
         n = self.inner.recv(buf, timeout)
-        if self.ch.on_recv:
-            for i in range(n):
-                buf[i] = self.ch.on_recv(buf[i])
+        if self._recv_batch and n:
+            out = self._recv_batch(buf[:n])
+            n = min(len(out), len(buf))
+            buf[:n] = out[:n]
         return n

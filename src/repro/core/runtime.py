@@ -57,21 +57,25 @@ class _FabricDatapath(Datapath):
         self.peer = peer
 
     def send(self, msgs: Iterable[Any]) -> None:
-        for m in msgs:
-            self.ep.send(self.peer, {"_data": m})
+        frames = [{"_data": m} for m in msgs]
+        if frames:
+            self.ep.send_batch(self.peer, frames)
 
     def recv(self, buf: list, timeout: Optional[float] = None) -> int:
         n = 0
+        tmp: list = [None] * len(buf)
         deadline = None if timeout is None else time.monotonic() + timeout
         while n < len(buf):
             t = None if deadline is None else max(0.0, deadline - time.monotonic())
-            got = self.ep.recv(timeout=t)
-            if got is None:
+            got = self.ep.recv_many(tmp, max_n=len(buf) - n, timeout=t)
+            if not got:
                 break
-            _, m = got
-            if isinstance(m, dict) and "_data" in m:
-                buf[n] = m["_data"]
-                n += 1
+            for k in range(got):  # unwrap frames (non-data frames are skipped)
+                m = tmp[k][1]
+                if isinstance(m, dict) and "_data" in m:
+                    buf[n] = m["_data"]
+                    n += 1
+            if n:
                 deadline = time.monotonic()  # drain whatever is queued
         return n
 
@@ -105,6 +109,7 @@ class HostAgent:
         self._decided: Dict[str, tuple] = {}  # conn -> (epoch, fp) at commit point
         self._pending: Dict[str, str] = {}    # conn -> fp of an undecided 2PC
         self._handlers: Dict[str, Callable[[str, dict], dict]] = {}
+        self._chans: Dict[str, ReliableChannel] = {}  # per-peer client channels
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
@@ -239,9 +244,24 @@ class HostAgent:
         record instead of the stale pre-swap handle state."""
         self._decided[conn_id] = (epoch, fp)
 
+    def _chan(self, peer: str, timeout: float, retries: int) -> ReliableChannel:
+        """Cached per-peer client channel on the main endpoint (keeps the
+        receiver's window/dedupe state warm across calls)."""
+        ch = self._chans.get(peer)
+        if ch is None or ch.timeout != timeout or ch.retries != retries:
+            ch = ReliableChannel(self.ep, peer, timeout=timeout, retries=retries)
+            self._chans[peer] = ch
+        return ch
+
     def request(self, peer: str, msg: dict, *, timeout: float = 0.1, retries: int = 40) -> dict:
-        chan = ReliableChannel(self.ep, peer + "/ctrl", timeout=timeout, retries=retries)
-        return chan.request(msg)
+        return self._chan(peer + "/ctrl", timeout, retries).request(msg)
+
+    def request_many(self, peer: str, msgs: List[dict], *, timeout: float = 0.1,
+                     retries: int = 40, window: Optional[int] = None) -> List[dict]:
+        """Pipelined reliable requests to one peer: up to W frames in flight
+        (ReliableChannel.request_window) instead of one RTT per frame."""
+        return self._chan(peer + "/ctrl", timeout, retries).request_window(
+            msgs, window=window)
 
     def reconfigure_multilateral(self, handle: ConnHandle, new_stack: ConcreteStack,
                                  peers: List[str], conn_id: str) -> bool:

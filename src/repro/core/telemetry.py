@@ -69,6 +69,16 @@ class EwmaQuantile:
         return self.value
 
 
+def _batch_bucket(n: int) -> str:
+    """Power-of-two histogram bucket label for a batch size."""
+    if n <= 0:
+        return "0"
+    if n == 1:
+        return "1"
+    lo = 1 << (n.bit_length() - 1)
+    return f"{lo}-{lo * 2 - 1}"
+
+
 class ConnTelemetry:
     """Per-connection (or per-job) counters feeding the policy engine.
 
@@ -96,6 +106,13 @@ class ConnTelemetry:
         self.op_p95 = EwmaQuantile(0.95)
         self.rtt_p50 = EwmaQuantile(0.50)
         self.rtt_p95 = EwmaQuantile(0.95)
+        # batch shape of the data plane (docs/architecture.md §8): power-of-two
+        # msgs-per-send histogram + incremental batch-size quantiles, so cost
+        # models and fleet aggregates can tell a per-message regime (batch=1)
+        # from a vectorized one
+        self.batch_hist: Dict[str, int] = {}
+        self.batch_p50 = EwmaQuantile(0.50)
+        self.batch_p95 = EwmaQuantile(0.95)
         # per-pod step-time EWMAs (straggler detection)
         self._pods: Dict[str, Ewma] = {}
         # reconfig blip stats folded in live from the owning handle
@@ -113,6 +130,10 @@ class ConnTelemetry:
         self.op_mean.update(dt_s)
         self.op_p50.update(dt_s)
         self.op_p95.update(dt_s)
+        b = _batch_bucket(n_msgs)
+        self.batch_hist[b] = self.batch_hist.get(b, 0) + 1
+        self.batch_p50.update(float(n_msgs))
+        self.batch_p95.update(float(n_msgs))
 
     def record_recv(self, n_msgs: int, n_bytes: int) -> None:
         self.msgs_in += n_msgs
@@ -171,9 +192,11 @@ class ConnTelemetry:
         windowed rates (``ops_per_s``, ``bytes_per_s`` — measured since the
         previous window reset), latency estimates (``op_mean_s``,
         ``op_p50_s``/``op_p95_s``, ``rtt_p50_s``/``rtt_p95_s``; None until
-        fed), the step plane (``pods``, ``step_time_s``,
-        ``straggler_ratio``), and the folded reconfig stats (``switches``,
-        ``last_switch_s``, ``total_blocked_s``).
+        fed), batch shape (``batch_hist`` — power-of-two msgs-per-send
+        histogram, ``batch_p50``/``batch_p95``, ``msgs_per_op``), the step
+        plane (``pods``, ``step_time_s``, ``straggler_ratio``), and the
+        folded reconfig stats (``switches``, ``last_switch_s``,
+        ``total_blocked_s``).
 
         ``reset_window=True`` (the controller's once-per-tick call) starts a
         new rate window; exactly ONE consumer may do that. Everyone else —
@@ -205,6 +228,10 @@ class ConnTelemetry:
             "op_mean_s": self.op_mean.value,
             "op_p50_s": self.op_p50.value,
             "op_p95_s": self.op_p95.value,
+            "batch_hist": dict(self.batch_hist),
+            "batch_p50": self.batch_p50.value,
+            "batch_p95": self.batch_p95.value,
+            "msgs_per_op": self.msgs_out / self.ops if self.ops else None,
             "rtt_p50_s": self.rtt_p50.value,
             "rtt_p95_s": self.rtt_p95.value,
             "pods": pods,

@@ -43,6 +43,11 @@ RULES: Dict[str, str] = {
     "unguarded-attr":
         "shared mutable attribute written without the class lock (or from a "
         "thread target) while other methods access it",
+    # data plane
+    "per-message-hot-path":
+        "per-element delivery loop (.send/.put/.publish per message) inside "
+        "a Datapath/Fabric/Endpoint hot-path method — batch it, or lift a "
+        "scalar transform with the per_message adapter",
     # compat boundary + hygiene
     "compat-boundary":
         "version-gated JAX symbol used outside src/repro/compat/",
@@ -85,7 +90,13 @@ def analyzer(fn: Analyzer) -> Analyzer:
 
 def _load_analyzers() -> None:
     # import for registration side effects; idempotent
-    from . import rules_compat, rules_concurrency, rules_hygiene, rules_stack  # noqa: F401
+    from . import (  # noqa: F401
+        rules_compat,
+        rules_concurrency,
+        rules_dataplane,
+        rules_hygiene,
+        rules_stack,
+    )
 
 
 def lint_module(mod: Module) -> List[Finding]:

@@ -71,30 +71,54 @@ class Broker:
         return len(self._subs[topic])
 
     def publish(self, topic: str, msg: dict) -> None:
+        self.publish_batch(topic, (msg,))
+
+    def publish_batch(self, topic: str, msgs) -> None:
+        """Batched publish: one lock acquisition and one shared latency draw
+        for the whole batch; per-message capacity spacing and (for unordered
+        models) per-message reorder jitter are preserved. Messages without
+        reorder jitter deliver together when the batch clears the capacity
+        pipe — for a single message this matches the per-message model
+        exactly."""
+        msgs = list(msgs)
+        if not msgs:
+            return
         m = self.model
         now = time.monotonic()
         with self._lock:
-            self.published += 1
-            self.cost += m.per_msg_cost
-            seq = next(self._seq)
+            self.published += len(msgs)
+            self.cost += m.per_msg_cost * len(msgs)
+            seqs = [next(self._seq) for _ in msgs]
             delay = m.base_latency_s + (self._rng.random() * m.jitter_s)
-            # capacity queueing: deliveries serialize at 1/capacity spacing
-            earliest = max(now + delay, self._last_deliver[topic] + 1.0 / m.capacity_mps)
-            self._last_deliver[topic] = earliest
+            # capacity queueing: deliveries serialize at 1/capacity spacing;
+            # the batch occupies len(msgs) slots in the pipe
+            earliest = max(now + delay,
+                           self._last_deliver[topic] + 1.0 / m.capacity_mps)
+            done = earliest + (len(msgs) - 1) / m.capacity_mps
+            self._last_deliver[topic] = done
             subs = list(self._subs[topic])
-        wire = dict(msg)
-        wire["_broker_seq"] = seq
-        if not m.ordered and self._rng.random() < 0.3:
-            # best-effort: occasional reorder via extra delay
-            earliest += m.base_latency_s * self._rng.random() * 2
+            # best-effort: occasional per-message reorder via extra delay
+            extra = [m.base_latency_s * self._rng.random() * 2
+                     if (not m.ordered and self._rng.random() < 0.3) else 0.0
+                     for _ in msgs]
+        wires = [dict(msg, _broker_seq=s) for msg, s in zip(msgs, seqs)]
+        main = [w for w, e in zip(wires, extra) if e == 0.0]
 
-        def deliver():
-            for fn in subs:
-                fn(dict(wire))
+        def deliver(batch):
+            for w in batch:
+                for fn in subs:
+                    fn(dict(w))
 
-        t = threading.Timer(max(0.0, earliest - time.monotonic()), deliver)
-        t.daemon = True
-        t.start()
+        if main:
+            t = threading.Timer(max(0.0, done - time.monotonic()), deliver, args=(main,))
+            t.daemon = True
+            t.start()
+        for w, e in zip(wires, extra):
+            if e > 0.0:
+                t = threading.Timer(max(0.0, done + e - time.monotonic()),
+                                    deliver, args=([w],))
+                t.daemon = True
+                t.start()
 
 
 # ---------------------------------------------------------------------------
@@ -139,8 +163,7 @@ class _PubSubDP(Datapath):
             self._cv.notify_all()
 
     def send(self, msgs):
-        for m in msgs:
-            self.broker.publish(self.topic, m)
+        self.broker.publish_batch(self.topic, msgs)
 
     def recv(self, buf, timeout=None):
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -151,8 +174,8 @@ class _PubSubDP(Datapath):
                     return 0
                 self._cv.wait(timeout=t)
             n = min(len(buf), len(self._inbox))
-            for i in range(n):
-                buf[i] = self._inbox.pop(0)
+            buf[:n] = self._inbox[:n]
+            del self._inbox[:n]
             return n
 
 
@@ -212,14 +235,15 @@ class _ReorderDP(Datapath):
         # release already-reordered messages first; only block on the inner
         # datapath when nothing is releasable
         n_out = self._release(buf, 0)
-        tmp = [None]
+        tmp: List[Optional[dict]] = [None] * max(len(buf), 8)
         while n_out < len(buf):
             got = self.inner.recv(tmp, 0.0 if n_out else timeout)
             if not got:
                 break
-            m = tmp[0]
-            g = m.get("group", 0)
-            self._held[(g, m.get("_order_seq", 0))] = m
+            for k in range(got):  # hold arrivals until their turn
+                m = tmp[k]
+                g = m.get("group", 0)
+                self._held[(g, m.get("_order_seq", 0))] = m
             n_out = self._release(buf, n_out)
             if n_out == 0:
                 # keep draining whatever is queued without blocking

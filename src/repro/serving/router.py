@@ -157,11 +157,13 @@ class _RoutedDP(Datapath):
         self.pick = pick
 
     def send(self, msgs):
-        for m in msgs:
+        out = []
+        for m in msgs:  # annotate routing decisions; forwarded as ONE batch
             m = dict(m)
             m["_route_to"] = self.pick(m)
-            if self.inner is not None:
-                self.inner.send([m])
+            out.append(m)
+        if self.inner is not None and out:
+            self.inner.send(out)
 
     def recv(self, buf, timeout=None):
         return self.inner.recv(buf, timeout) if self.inner else 0
@@ -185,22 +187,18 @@ class AddressedTransport(Chunnel):
 
         class DP(Datapath):
             def send(self, msgs):
-                for m in msgs:
-                    ep.send(m.pop("_route_to"), m)
+                by_dst: Dict[str, list] = {}
+                for m in msgs:  # group by destination; one send_batch per peer
+                    by_dst.setdefault(m.pop("_route_to"), []).append(m)
+                for dst, batch in by_dst.items():
+                    ep.send_batch(dst, batch)
 
             def recv(self, buf, timeout=None):
-                n = 0
-                deadline = None if timeout is None else time.monotonic() + timeout
-                while n < len(buf):
-                    t = None if deadline is None else max(0.0, deadline - time.monotonic())
-                    got = ep.recv(timeout=t)
-                    if got is None:
-                        break
-                    buf[n] = got[1]
-                    n += 1
-                    if timeout is not None:
-                        break
-                return n
+                tmp: List[Any] = [None] * len(buf)
+                got = ep.recv_many(tmp, timeout=timeout)
+                for k in range(got):
+                    buf[k] = tmp[k][1]
+                return got
 
         return DP()
 

@@ -116,6 +116,25 @@ class TestTelemetry:
         s = t.snapshot()
         assert s["switches"] == 2 and s["last_switch_s"] == 0.5
 
+    def test_batch_shape_counters(self):
+        # PR 7: the data plane is batched, so telemetry tracks msgs/op shape
+        t = ConnTelemetry()
+        for n in (1, 1, 3, 8, 64, 0):
+            t.record_send(n, 10 * n, 0.001)
+        s = t.snapshot()
+        assert s["batch_hist"] == {"1": 2, "2-3": 1, "8-15": 1, "64-127": 1,
+                                   "0": 1}
+        assert s["msgs_per_op"] == pytest.approx((1 + 1 + 3 + 8 + 64) / 6)
+        assert s["batch_p50"] <= s["batch_p95"]
+
+    def test_batch_quantiles_track_batch_size(self):
+        t = ConnTelemetry()
+        for _ in range(200):
+            t.record_send(64, 64, 0.001)
+        s = t.snapshot()
+        assert s["batch_p50"] == pytest.approx(64, rel=0.2)
+        assert s["batch_p95"] == pytest.approx(64, rel=0.2)
+
 
 class TestControllerPolicy:
     def mk(self, rules, *, clock=None, cooldown=0.0, refuse=False, start="A"):

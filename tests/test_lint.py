@@ -577,3 +577,83 @@ class TestCLI:
         assert r.returncode == 0
         for rule in ("lock-order", "compat-boundary", "stack-dead-option"):
             assert rule in r.stdout
+
+
+class TestPerMessageHotPath:
+    BAD_DP = (
+        "class ShimDP:\n"
+        "    def send(self, msgs):\n"
+        "        for m in msgs:\n"
+        "            self.inner.send([m])\n"
+    )
+    BAD_FABRIC = (
+        "class Fabric:\n"
+        "    def send_batch(self, src, dst, msgs):\n"
+        "        for m in msgs:\n"
+        "            self._eps[dst].inbox.put((src, m))\n"
+    )
+    GOOD_BATCH = (
+        "class ShimDP:\n"
+        "    def send(self, msgs):\n"
+        "        out = [self.fn(m) for m in msgs]\n"
+        "        self.inner.send(out)\n"
+    )
+    GOOD_GROUPING = (
+        "class RouteDP:\n"
+        "    def send(self, msgs):\n"
+        "        by_dst = {}\n"
+        "        for m in msgs:\n"
+        "            by_dst.setdefault(m['dst'], []).append(m)\n"
+        "        for dst, batch in by_dst.items():\n"
+        "            self.ep.send_batch(dst, batch)\n"
+    )
+
+    def test_singleton_send_loop_flagged(self):
+        assert rules_of(lint_sources({CORE: self.BAD_DP})) == {
+            "per-message-hot-path"}
+
+    def test_per_message_queue_put_flagged(self):
+        assert rules_of(lint_sources({CORE: self.BAD_FABRIC})) == {
+            "per-message-hot-path"}
+
+    def test_comprehension_delivery_flagged(self):
+        src = ("class PushDP:\n"
+               "    def send(self, msgs):\n"
+               "        [self.broker.publish(t, m) for t, m in msgs]\n")
+        assert rules_of(lint_sources({CORE: src})) == {"per-message-hot-path"}
+
+    def test_batched_send_ok(self):
+        assert lint_sources({CORE: self.GOOD_BATCH}) == []
+
+    def test_per_destination_send_batch_ok(self):
+        # grouping loops that forward whole sub-batches stay legal
+        assert lint_sources({CORE: self.GOOD_GROUPING}) == []
+
+    def test_inherited_datapath_base_is_hot(self):
+        src = ("class Shim(Datapath):\n"
+               "    def recv(self, buf, timeout=None):\n"
+               "        while True:\n"
+               "            buf.append(self.inner.request(1))\n")
+        assert rules_of(lint_sources({CORE: src})) == {"per-message-hot-path"}
+
+    def test_cold_class_not_flagged(self):
+        src = ("class Planner:\n"
+               "    def send(self, msgs):\n"
+               "        for m in msgs:\n"
+               "            self.inner.send([m])\n")
+        assert lint_sources({CORE: src}) == []
+
+    def test_cold_method_not_flagged(self):
+        src = ("class ShimDP:\n"
+               "    def close(self):\n"
+               "        for c in self.children:\n"
+               "            c.send(b'bye')\n")
+        assert lint_sources({CORE: src}) == []
+
+    def test_pragma_suppresses(self):
+        src = ("class ShimDP:\n"
+               "    def send(self, msgs):\n"
+               "        for m in msgs:\n"
+               "            # lint: allow[per-message-hot-path] fixture justification\n"
+               "            self.inner.send([m])\n")
+        assert lint_sources({CORE: src}) == []
