@@ -55,6 +55,7 @@ from repro.core import (
     Fabric,
     FabricTransport,
     FnChunnel,
+    HostAgent,
     KVStore,
     LATENCY_FIRST,
     LinkModel,
@@ -78,6 +79,7 @@ from repro.serving.router import KVBackend, KVClient, Router, routing_stack
 JSON_OUT = pathlib.Path(__file__).parent / "out" / "controller_scenarios.json"
 SCORED_OUT = pathlib.Path(__file__).parent / "out" / "scored_negotiation.json"
 FLEET_OUT = pathlib.Path(__file__).parent / "out" / "fleet_scenario.json"
+CHAOS_OUT = pathlib.Path(__file__).parent / "out" / "chaos_scenarios.json"
 
 
 def _stack(fabric, tag):
@@ -563,6 +565,312 @@ def run_controller_barrier(n_threads: int = 3, *, fast: bool = False) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Chaos scenarios: hostile-network regions + coordinator crash mid-commit
+# ---------------------------------------------------------------------------
+
+
+def run_chaos_regions(*, fast: bool = False) -> dict:
+    """Region-aware link adaptation under injected WAN weather (§7 / ROADMAP
+    direction 5).
+
+    Two regions talk to one ``WanGateway`` hub through the same negotiated
+    Select [FastWire | WanLink]. A ``ChaosPlan`` degrades every link between
+    the WAN region and the hub (latency + jitter + heavy loss) and later
+    rides a short hard partition on top of the weather. Each region's driver
+    probes its link every tick and feeds two scenario keys into the
+    controller snapshot — ``link.timeout_ratio`` (probe timeouts per window)
+    and ``link.retransmit_ratio`` (windowed WAN go-back-N retransmits per
+    frame) — so the ``wan_region_adaptive`` policy moves the lossy region to
+    the compressed+reliable WAN option while the clean DCN region stays on
+    the fast path, in the same run."""
+    import numpy as np
+
+    from repro.chaos import ChaosInjector, ChaosPlan
+    from repro.comm.chunnels import WanLinkChunnel  # registers the policy
+    from repro.serving.gateway import WanGateway
+
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0002), seed=7)
+    gw = WanGateway(fabric, "hub")
+
+    class Region:
+        def __init__(self, name: str):
+            self.name = name
+            self.ep_fast = fabric.register(f"{name}/fastlink")
+            self.ep_wan = fabric.register(f"{name}/wanlink")
+            self.stack = make_stack(Select(
+                FabricTransport(self.ep_fast, "hub/fast", label="FastWire"),
+                WanLinkChunnel(self.ep_wan, "hub/wan", mtu_bytes=2048,
+                               window=8, timeout_s=0.03, retries=8),
+            ))
+            self.handle = LockedConn(self.stack.preferred())  # FastWire
+            self.ctl = conn_controller(
+                self.handle, self.stack,
+                policy="wan_region_adaptive",
+                policy_params={"breach_timeout_ratio": 0.05,
+                               "recover_timeout_ratio": 0.01,
+                               "recover_retransmit_ratio": 0.02, "hold": 2},
+                cooldown_s=0.15,
+            )
+            self.rid = 0
+            self.timeouts = self.probes = 0
+            self._prev = (None, 0, 0)  # (dp id, retransmits, frames_sent)
+
+        def on_wan(self) -> bool:
+            return any(c.name == "WanLink" for c in self.handle.stack.chunnels)
+
+        def probe(self, timeout: float = 0.08) -> None:
+            self.rid += 1
+            self.probes += 1
+            if self.on_wan():
+                # delivery is confirmed by the window acks themselves
+                try:
+                    self.handle.send([{"rid": self.rid}])
+                except TimeoutError:
+                    self.timeouts += 1
+                return
+            # fast path: fire-and-forget send, wait for the gateway echo
+            self.handle.send([{"rid": self.rid}])
+            buf = [None]
+            deadline = time.monotonic() + timeout
+            while True:
+                t = deadline - time.monotonic()
+                if t <= 0 or not self.handle.recv(buf, timeout=max(t, 0.0)):
+                    self.timeouts += 1
+                    return
+                m = buf[0]
+                if isinstance(m, dict) and m.get("rid") == self.rid:
+                    return  # stale echoes of timed-out probes are skipped
+
+        def rtx_ratio(self) -> float:
+            """Windowed WAN retransmits per frame; 0.0 on the fast path."""
+            if not self.on_wan():
+                self._prev = (None, 0, 0)
+                return 0.0
+            s = self.handle.dp.stats()
+            prev_id, prev_rtx, prev_fr = self._prev
+            if prev_id != id(self.handle.dp):  # fresh datapath after a swap
+                prev_rtx = prev_fr = 0
+            d_rtx = s["retransmits"] - prev_rtx
+            d_fr = s["frames_sent"] - prev_fr
+            self._prev = (id(self.handle.dp), s["retransmits"],
+                          s["frames_sent"])
+            return d_rtx / max(1, d_fr)
+
+        def tick(self):
+            snap = self.handle.telemetry.snapshot()
+            snap["link.timeout_ratio"] = self.timeouts / max(1, self.probes)
+            snap["link.retransmit_ratio"] = self.rtx_ratio()
+            self.timeouts = self.probes = 0
+            return self.ctl.tick(snap)
+
+    wan, dcn = Region("wan-cli"), Region("dcn-cli")
+    weather = LinkModel(latency_s=0.004, jitter_s=0.002, loss=0.25)
+    plan = ChaosPlan(seed=7)
+    plan.degrade("wan-cli", "hub", weather, at=0.0, label="wan-weather")
+    # a short hard partition riding on the weather, pulled by the driver one
+    # tick after the WAN region adopted the WAN stack: the link must absorb
+    # it (failed sends + keepalive misses), not wedge or leak partial blobs
+    plan.partition("wan-cli", "hub", on="storm", for_s=0.2, label="wan-storm")
+    inj = ChaosInjector(fabric, plan).start()
+    inj.poll()  # apply the weather before the first probe window
+
+    # deterministic tensor payload exercising MTU chunking on the WAN wire
+    blob = (np.arange(64 * 257, dtype=np.float32).reshape(64, 257) - 8000.0)
+
+    max_ticks = 8 if fast else 14
+    probes_per_tick = 4 if fast else 6
+    storm_at = None          # tick index at which the storm fires
+    post_storm = 0
+    wan_switch_tick = None
+    try:
+        for tick in range(max_ticks):
+            inj.poll()
+            if storm_at == tick:
+                inj.fire("storm")
+            for r in (wan, dcn):
+                if r.on_wan():
+                    r.handle.dp.ping(retries=2)  # keepalive probe
+                for _ in range(probes_per_tick):
+                    r.probe()
+                    inj.poll()  # autoheal mid-window, not at tick granularity
+                    time.sleep(0.004)
+                if r.on_wan() and tick % 2 == 0:
+                    try:
+                        r.handle.send([blob])  # chunked + quantized tensor
+                    except TimeoutError:
+                        pass  # counted in failed_sends by the datapath
+            for r in (wan, dcn):
+                d = r.tick()
+                if (r is wan and wan_switch_tick is None
+                        and d.reason == "switched"):
+                    wan_switch_tick = tick
+                    storm_at = tick + 1
+            if storm_at is not None and tick > storm_at:
+                post_storm += 1
+            if post_storm >= 2:
+                break  # storm evidence collected; no need to run the tail out
+    finally:
+        wan_stats = wan.handle.dp.stats() if wan.on_wan() else {}
+        inj.stop()
+        gw_stats = gw.stats()
+        gw.close()
+
+    def region_result(r: Region) -> dict:
+        return {
+            "final_stack": repr(r.handle.stack),
+            "chunnels": [c.name for c in r.handle.stack.chunnels],
+            "capabilities": sorted(
+                str(c) for ch in r.handle.stack.chunnels
+                for c in ch.capabilities()),
+            "switches": [d.to_json() for d in r.ctl.switch_log()],
+            "counts": r.ctl.counts(),
+            "total_switches": r.handle.stats.switches,
+        }
+
+    return {
+        "scenario": "chaos-regions",
+        "wan": {**region_result(wan), "link_stats": wan_stats,
+                "switch_tick": wan_switch_tick},
+        "dcn": region_result(dcn),
+        "gateway": gw_stats,
+        "events": inj.log,
+        "weather": {"latency_s": weather.latency_s,
+                    "jitter_s": weather.jitter_s, "loss": weather.loss},
+        "storm_tick": storm_at,
+    }
+
+
+def run_chaos_partition_2pc(*, fast: bool = False) -> dict:
+    """Coordinator crash exactly mid-commit, then heal (§4.2 failure path).
+
+    Three HostAgents share a multilateral connection; A coordinates a 2PC
+    switch with a small chaos reliability budget. The ``ChaosPlan`` hangs a
+    crash of A on the ``mid_commit`` trigger, pulled from the commit hook —
+    the decision is recorded, then A blackholes before ANY phase-2
+    notification lands, stranding B and C prepared. Their resync queries
+    fail (counted) until the plan restarts A, after which the epoch-query
+    path converges every survivor onto the committed epoch with zero
+    stranded prepared peers."""
+    from repro.chaos import ChaosInjector, ChaosPlan
+
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0003), seed=11)
+    agents = {n: HostAgent(fabric, n) for n in ("2pc-A", "2pc-B", "2pc-C")}
+    hA = agents["2pc-A"]
+    conn = "chaos-conn"
+
+    def member_stack(name):
+        ep = fabric.register(f"{name}/data")
+        return make_stack(
+            Select(FnChunnel(fn_name="Blue", on_send=lambda m: m),
+                   FnChunnel(fn_name="Green", on_send=lambda m: m)),
+            FabricTransport(ep, "hub"))
+
+    stacks = {n: member_stack(n) for n in agents}
+    handleA = LockedConn(stacks["2pc-A"].preferred())
+    target = stacks["2pc-A"].options()[1]  # Blue -> Green
+    # identical stacks on every member: the proposed fingerprint must resolve
+    assert all(st.find(target.fingerprint()) for st in stacks.values())
+    for n in ("2pc-B", "2pc-C"):
+        agents[n].register_participant(
+            conn, LockedConn(stacks[n].preferred()), stacks[n].find,
+            resync_after_s=0.12)
+
+    plan = ChaosPlan(seed=3)
+    plan.crash("2pc-A", on="mid_commit", label="coordinator-crash")
+    plan.restart("coordinator-crash", at=0.45)
+    inj = ChaosInjector(fabric, plan).start()
+
+    # pull the crash trigger from the commit hook: the decision is recorded,
+    # then the coordinator vanishes before any phase-2 notification lands
+    record = hA.record_decision
+
+    def record_and_vanish(conn_id, epoch, fp):
+        record(conn_id, epoch, fp)
+        inj.fire("mid_commit")
+
+    hA.record_decision = record_and_vanish
+
+    t0 = time.monotonic()
+    ok = hA.reconfigure_multilateral(handleA, target, ["2pc-B", "2pc-C"],
+                                     conn, timeout=0.04, retries=2)
+
+    parts = {n: agents[n].participant(conn) for n in ("2pc-B", "2pc-C")}
+    deadline = time.monotonic() + (4.0 if fast else 6.0)
+    converge_s = None
+    try:
+        while time.monotonic() < deadline:
+            inj.poll()
+            if (all(p.prepared is None for p in parts.values())
+                    and all(p.epoch == handleA.stats.switches
+                            for p in parts.values())):
+                converge_s = time.monotonic() - t0
+                break
+            time.sleep(0.01)
+        fps = {"2pc-A": handleA.stack.fingerprint()}
+        fps.update({n: p.handle.stack.fingerprint()
+                    for n, p in parts.items()})
+        epochs = {"2pc-A": handleA.stats.switches}
+        epochs.update({n: p.epoch for n, p in parts.items()})
+        return {
+            "scenario": "partition-2pc",
+            "commit_ok": ok,
+            "converged": converge_s is not None,
+            "converge_s": converge_s,
+            "stranded_prepared": sum(p.prepared is not None
+                                     for p in parts.values()),
+            "resync_failures": {n: p.resync_failures
+                                for n, p in parts.items()},
+            "epochs": epochs,
+            "fingerprints": fps,
+            "target_fp": target.fingerprint(),
+            "events": inj.log,
+        }
+    finally:
+        inj.stop()
+        for a in agents.values():
+            a.close()
+
+
+def emit_chaos_scenarios(*, fast: bool = False) -> dict:
+    """Run both chaos scenarios, write the JSON artifact, and assert the
+    acceptance shape: in ONE run the controller selects compressed+reliable
+    on the lossy WAN region AND keeps the fast path on the clean DCN region;
+    the partition-during-2PC scenario ends with zero stranded prepared peers
+    and every survivor on one committed epoch. Shared by main() and
+    run.py --smoke."""
+    res = {"regions": run_chaos_regions(fast=fast),
+           "partition_2pc": run_chaos_partition_2pc(fast=fast)}
+    CHAOS_OUT.parent.mkdir(parents=True, exist_ok=True)
+    CHAOS_OUT.write_text(json.dumps(res, indent=2, default=float))
+
+    wan, dcn = res["regions"]["wan"], res["regions"]["dcn"]
+    # lossy WAN region: switched by the link-health rule onto the WAN option,
+    # whose capabilities spell out compressed (q8 blocks) + reliable (gbn)
+    assert wan["switches"], wan
+    assert wan["switches"][0]["rule"] == "lossy-wan->compressed-reliable", wan
+    assert "WanLink" in wan["chunnels"], wan
+    assert any("wan-gbn" in c for c in wan["capabilities"]), wan
+    assert any("q8b" in c for c in wan["capabilities"]), wan
+    # clean DCN region, same run: never left the fast path
+    assert not dcn["switches"] and "FastWire" in dcn["chunnels"], dcn
+    # the WAN wire really carried chunked+reassembled blobs and repaired loss
+    assert res["regions"]["gateway"]["wan_blobs"] >= 1, res["regions"]
+    ls = wan["link_stats"]
+    assert ls.get("retransmits", 0) > 0, ls
+    # the storm left evidence (failed sends or keepalive misses), not a wedge
+    assert ls.get("failed_sends", 0) + ls.get("keepalive_failures", 0) > 0, ls
+
+    p2 = res["partition_2pc"]
+    assert p2["commit_ok"] and p2["converged"], p2
+    assert p2["stranded_prepared"] == 0, p2
+    assert set(p2["fingerprints"].values()) == {p2["target_fp"]}, p2
+    assert len(set(p2["epochs"].values())) == 1, p2
+    # the crash really blocked resync for a while (queries failed, then healed)
+    assert sum(p2["resync_failures"].values()) >= 1, p2
+    return res
+
+
 def main() -> None:
     for mech in ("lock", "barrier"):
         lat, switch_s = run_mechanism(mech)
@@ -599,6 +907,19 @@ def main() -> None:
          f"switches={fleet['counts']['committed']};"
          f"peak_member_qps={fleet['peak_member_qps']:.0f}")
     print(f"# fleet scenario JSON: {FLEET_OUT}", file=sys.stderr, flush=True)
+
+    chaos = emit_chaos_scenarios()
+    wan, p2 = chaos["regions"]["wan"], chaos["partition_2pc"]
+    emit("reconfig_chaos_regions", 0.0,
+         f"wan_switch_tick={wan['switch_tick']};"
+         f"wan_rule={wan['switches'][0]['rule']};"
+         f"dcn_switches={len(chaos['regions']['dcn']['switches'])};"
+         f"retransmits={wan['link_stats'].get('retransmits', 0)}")
+    emit("reconfig_chaos_2pc", (p2["converge_s"] or 0.0) * 1e6,
+         f"stranded={p2['stranded_prepared']};"
+         f"resync_failures={sum(p2['resync_failures'].values())};"
+         f"epoch={p2['epochs']['2pc-A']}")
+    print(f"# chaos scenario JSON: {CHAOS_OUT}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ def smoke() -> None:
     common.smoke_check()
 
     from benchmarks.bench_reconfigure import (
+        emit_chaos_scenarios,
         emit_fleet_scenario,
         emit_scored_negotiation,
         run_controller_kv,
@@ -85,6 +86,19 @@ def smoke() -> None:
           f"switches={fleet['counts']['committed']};"
           f"epochs={fleet['phases'][-1]['epoch']};"
           f"peak_member_qps={fleet['peak_member_qps']:.0f}")
+
+    # chaos harness: injected WAN weather + storm drives the region onto the
+    # compressed+reliable WAN option while the clean region keeps the fast
+    # path, and a coordinator crashed exactly mid-commit converges with zero
+    # stranded prepared peers (asserts the acceptance shape internally and
+    # writes benchmarks/out/chaos_scenarios.json — a CI artifact)
+    chaos = emit_chaos_scenarios(fast=True)
+    _wan, _p2 = chaos["regions"]["wan"], chaos["partition_2pc"]
+    print("smoke_chaos,0.00,"
+          f"wan_rule={_wan['switches'][0]['rule']};"
+          f"dcn_switches={len(chaos['regions']['dcn']['switches'])};"
+          f"stranded={_p2['stranded_prepared']};"
+          f"resync_failures={sum(_p2['resync_failures'].values())}")
 
     print("# smoke ok on jax compat paths:", file=sys.stderr)
     for line in compat.report().splitlines():

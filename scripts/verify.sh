@@ -9,8 +9,12 @@
 #                               pytest < 7 installs
 #   4. benchmark smoke pass   — import + mesh/shard_map sanity for the bench
 #                               tier, plus the controller-driven reconfigure
-#                               scenario (telemetry -> policy -> switch) run
-#                               headless so the close-the-loop path is tier-1
+#                               scenario (telemetry -> policy -> switch) and
+#                               the chaos smoke (WAN-weather region switch +
+#                               coordinator crash mid-commit, emitting
+#                               benchmarks/out/chaos_scenarios.json) run
+#                               headless so the close-the-loop and failure
+#                               paths are tier-1
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,7 +28,7 @@ python -m repro.lint --strict --stacks --json benchmarks/out/lint_report.json
 echo "== tier-1 tests =="
 python -m pytest -q
 
-echo "== benchmark smoke =="
+echo "== benchmark smoke (incl. chaos scenarios) =="
 python -m benchmarks.run --smoke
 
 echo "== data-plane throughput smoke =="

@@ -15,15 +15,26 @@ default); the others take manual control of the pod/DCN tier via shard_map.
 """
 from __future__ import annotations
 
+import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm import collectives, compress
 from repro.core.capability import CapabilitySet
 from repro.core.chunnel import Chunnel, Datapath, WireType
+from repro.core.controller import (
+    PolicyContext,
+    Rule,
+    above,
+    all_of,
+    below,
+    register_policy,
+)
 from repro.core.cost import CostModel
 
 GRADS_F32 = WireType.of("grads", dtype="f32")
@@ -457,3 +468,262 @@ TRANSPORTS = {
 
 def make_transport(name: str, **kw) -> StepChunnel:
     return TRANSPORTS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# WAN link layer (host plane, ROADMAP direction 5)
+# ---------------------------------------------------------------------------
+
+
+class WanLinkChunnel(Chunnel):
+    """WAN-grade link transport: the "compressed + reliable" stack option a
+    region adopts when its links turn hostile (docs/architecture.md §9).
+
+    Layers, top down:
+      * MTU-aware chunking/reassembly of large tensors through the
+        ``comm/wire.py`` frame format — float batches ride the fused int8
+        block-quantized encode (the compressed wire), opaque byte payloads
+        are chunked raw, small control messages pass through whole;
+      * go-back-N retransmission: every frame batch goes through one
+        ``ReliableChannel.request_window`` call, so delivery is confirmed
+        (``send`` returns only once the peer acked the window) and loss is
+        repaired by retransmit instead of surfacing to the application;
+      * keepalives: ``ping()`` probes the peer fail-fast, ``alive()`` tracks
+        last-heard age, so a region notices a partition without waiting for
+        a full send to stall out.
+
+    Unilateral by design: the peer is a dedicated WAN gateway endpoint
+    (``repro.serving.gateway.WanGateway``) that always speaks this frame
+    format, so a region can adopt or drop the WAN stack without negotiating
+    with anyone — the same shape as the serving plane's ClientShard option.
+    """
+
+    upper_type = WireType.of("bytes")
+    lower_type = UNIT
+    multilateral = False
+
+    def __init__(self, ep, peer: str, *, mtu_bytes: int = 4096,
+                 window: int = 8, timeout_s: float = 0.03, retries: int = 8,
+                 keepalive_s: float = 0.25, block: int = 256,
+                 use_kernel: bool = False, max_partial: int = 64,
+                 label: str = "WanLink"):
+        self.ep = ep
+        self.peer = peer
+        self.mtu_bytes = mtu_bytes
+        self.window = window
+        self.timeout_s = timeout_s
+        self.retries = retries
+        self.keepalive_s = keepalive_s
+        self.block = block
+        self.use_kernel = use_kernel
+        self.max_partial = max_partial
+        self._label = label
+
+    @property
+    def name(self) -> str:
+        return self._label
+
+    def capabilities(self) -> CapabilitySet:
+        # compose, not exact: the gateway side always speaks the WAN frame
+        # format, so adopting it is a one-sided decision per region
+        return CapabilitySet.compose("link:wan-gbn", f"link:q8b{self.block}")
+
+    def cost_model(self) -> CostModel:
+        return CostModel(op_latency_s=2e-3,
+                         dcn_bytes_per_byte=compress.int8_wire_ratio(self.block),
+                         switch_blip_s=2e-3)
+
+    def connect_wrap(self, inner: Optional[Datapath]) -> Datapath:
+        assert inner is None, "transport chunnels bootstrap from the unit type"
+        return _WanLinkDP(self)
+
+
+def _is_float_tensor(m) -> bool:
+    dt = getattr(m, "dtype", None)
+    if dt is None:
+        return False
+    try:
+        return np.issubdtype(np.dtype(dt), np.floating)
+    except TypeError:
+        return False
+
+
+class _WanLinkDP(Datapath):
+    """Live WAN link: one ``request_window`` per batch on the send side, a
+    ``serve_one`` pump + bounded ``Reassembler`` on the receive side."""
+
+    def __init__(self, ch: WanLinkChunnel):
+        from repro.comm.wire import Reassembler
+        from repro.core.fabric import ReliableChannel
+
+        self.ch = ch
+        self._chan = ReliableChannel(ch.ep, ch.peer, timeout=ch.timeout_s,
+                                     retries=ch.retries, window=ch.window)
+        self._reasm = Reassembler(max_partial=ch.max_partial)
+        self._ready: deque = deque()
+        self._last_heard = time.monotonic()
+        self.msgs_sent = 0
+        self.frames_sent = 0
+        self.failed_sends = 0
+        self.pings_ok = 0
+        self.keepalive_failures = 0
+
+    # -- send: classify, encode, one reliable window per batch ----------------
+    def send(self, msgs):
+        from repro.comm.wire import chunk_payload, encode_batch
+
+        msgs = list(msgs)
+        if not msgs:
+            return
+        frames: list = []
+        tensors: list = []
+
+        def flush_tensors():
+            if tensors:
+                frames.extend(encode_batch(
+                    tensors, block=self.ch.block,
+                    use_kernel=self.ch.use_kernel,
+                    chunk_bytes=self.ch.mtu_bytes))
+                tensors.clear()
+
+        for m in msgs:
+            if _is_float_tensor(m):
+                tensors.append(m)  # contiguous runs share one device call
+            elif isinstance(m, (bytes, bytearray)):
+                flush_tensors()
+                frames.extend(chunk_payload(bytes(m), {"kind": "raw"},
+                                            chunk_bytes=self.ch.mtu_bytes))
+            else:
+                flush_tensors()
+                frames.append({"_obj": m})
+        flush_tensors()
+        self.msgs_sent += len(msgs)
+        self.frames_sent += len(frames)
+        try:
+            self._chan.request_window(frames)
+        except TimeoutError:
+            self.failed_sends += 1
+            raise
+        self._last_heard = time.monotonic()
+
+    # -- receive: pump the reliable server side into the ready queue ----------
+    def recv(self, buf, timeout=None):
+        n_out = self._drain(buf, 0)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while n_out < len(buf):
+            if n_out:
+                t: Optional[float] = 0.0  # drain-only once delivering
+            elif deadline is None:
+                t = None
+            else:
+                t = deadline - time.monotonic()
+                if t <= 0:
+                    break
+            if not self._chan.serve_one(self._ingest_frame, timeout=t):
+                if n_out or t == 0.0:
+                    break
+                continue  # spurious wakeup (stray frame): keep waiting
+            n_out = self._drain(buf, n_out)
+        return n_out
+
+    def _ingest_frame(self, src, body):
+        from repro.comm.wire import decode_blob
+
+        self._last_heard = time.monotonic()
+        if isinstance(body, dict):
+            if "_wire" in body:
+                done = self._reasm.ingest(body)
+                if done is not None:
+                    payload, hdr = done
+                    if hdr.get("kind") == "raw":
+                        self._ready.append(payload)
+                    else:
+                        self._ready.extend(decode_blob(
+                            payload, hdr, use_kernel=self.ch.use_kernel))
+                return {"ok": True}
+            if "_ka" in body:
+                return {"pong": True}
+            if "_obj" in body:
+                self._ready.append(body["_obj"])
+                return {"ok": True}
+        self._ready.append(body)
+        return {"ok": True}
+
+    def _drain(self, buf, n_out: int) -> int:
+        while n_out < len(buf) and self._ready:
+            buf[n_out] = self._ready.popleft()
+            n_out += 1
+        return n_out
+
+    # -- keepalives ------------------------------------------------------------
+    def ping(self, retries: int = 3) -> bool:
+        """Fail-fast liveness probe; updates last-heard on success."""
+        try:
+            self._chan.request({"_ka": True}, retries=retries)
+        except TimeoutError:
+            self.keepalive_failures += 1
+            return False
+        self.pings_ok += 1
+        self._last_heard = time.monotonic()
+        return True
+
+    def alive(self, now: Optional[float] = None, grace: float = 3.0) -> bool:
+        """Heard from the peer within ``grace`` keepalive periods?"""
+        now = time.monotonic() if now is None else now
+        return (now - self._last_heard) <= grace * self.ch.keepalive_s
+
+    def keepalive_due(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        return (now - self._last_heard) >= self.ch.keepalive_s
+
+    # -- observability ----------------------------------------------------------
+    @property
+    def retransmits(self) -> int:
+        return self._chan.retransmits
+
+    def stats(self) -> dict:
+        """Link-health counters a region controller can fold into its
+        telemetry snapshot (``link.*`` keys in ``wan_region_adaptive``)."""
+        return {
+            "msgs_sent": self.msgs_sent,
+            "frames_sent": self.frames_sent,
+            "failed_sends": self.failed_sends,
+            "retransmits": self._chan.retransmits,
+            "retransmit_ratio":
+                self._chan.retransmits / max(1, self.frames_sent),
+            "keepalive_failures": self.keepalive_failures,
+            "partial_blobs": self._reasm.partial_count(),
+            "evicted_partials": self._reasm.evicted,
+        }
+
+
+@register_policy("wan_region_adaptive")
+def wan_region_adaptive_policy(ctx: PolicyContext) -> List[Rule]:
+    """Per-region link-health policy (ROADMAP direction 5): a lossy region
+    moves its Select to the WAN compressed+reliable option; a region whose
+    link is clean (and whose WAN datapath isn't retransmitting) recovers to
+    the fast path. Reads two scenario-fed snapshot keys:
+
+      link.timeout_ratio     fraction of recent probes that timed out
+                             (1.0 during a hard partition)
+      link.retransmit_ratio  WAN-link retransmits per frame sent — nonzero
+                             while the link still drops frames, so recovery
+                             only arms on genuinely clean links
+    """
+    p = ctx.params
+    breach = p.get("breach_timeout_ratio", 0.05)
+    recover = p.get("recover_timeout_ratio", 0.01)
+    rtx_ok = p.get("recover_retransmit_ratio", 0.02)
+    hold = p.get("hold", 2)
+    wan = ctx.candidate_named(*p.get("wan_names", ("WanLink",))).target
+    fast = ctx.candidate_named(
+        *p.get("fast_names", ("FastWire", "FabricTransport"))).target
+    return [
+        Rule("lossy-wan->compressed-reliable",
+             above("link.timeout_ratio", breach), wan,
+             hold=hold, priority=1),
+        Rule("clean-link->fast-path",
+             all_of(below("link.timeout_ratio", recover),
+                    below("link.retransmit_ratio", rtx_ok)),
+             fast, hold=hold, priority=0),
+    ]

@@ -78,6 +78,19 @@ def _fused_decode(packed: jnp.ndarray, *, n_blocks: int, block: int,
     return out.reshape(-1)
 
 
+def chunk_payload(payload: bytes, hdr: dict, *,
+                  chunk_bytes: int = 1 << 16) -> List[dict]:
+    """Split one blob into MTU-sized ``{"_wire": (id, k, n), "hdr", "data"}``
+    fabric frames (header rides chunk 0 only). The generic framing layer under
+    both the compressed wire path and the WAN link chunnel."""
+    blob_id = _next_blob_id()
+    n_chunks = max(1, -(-len(payload) // chunk_bytes))
+    return [{"_wire": (blob_id, k, n_chunks),
+             "hdr": hdr if k == 0 else None,
+             "data": payload[k * chunk_bytes:(k + 1) * chunk_bytes]}
+            for k in range(n_chunks)]
+
+
 def encode_batch(msgs: List[Any], *, block: int = 256, use_kernel: bool = True,
                  chunk_bytes: int = 1 << 16) -> List[dict]:
     """Batch of float arrays -> wire frames. One host concat, one fused
@@ -99,12 +112,7 @@ def encode_batch(msgs: List[Any], *, block: int = 256, use_kernel: bool = True,
         n_blocks = 0
     hdr = {"shapes": [tuple(s) for s in shapes], "block": block,
            "n_blocks": n_blocks}
-    blob_id = _next_blob_id()
-    n_chunks = max(1, -(-len(payload) // chunk_bytes))
-    return [{"_wire": (blob_id, k, n_chunks),
-             "hdr": hdr if k == 0 else None,
-             "data": payload[k * chunk_bytes:(k + 1) * chunk_bytes]}
-            for k in range(n_chunks)]
+    return chunk_payload(payload, hdr, chunk_bytes=chunk_bytes)
 
 
 def decode_blob(payload: bytes, hdr: dict, *, use_kernel: bool = True) -> List[np.ndarray]:
@@ -124,6 +132,46 @@ def decode_blob(payload: bytes, hdr: dict, *, use_kernel: bool = True) -> List[n
         out.append(flat[off:off + size].reshape(shp))
         off += size
     return out
+
+
+class Reassembler:
+    """Bounded reassembly of ``chunk_payload`` frames into whole blobs.
+
+    ``ingest`` returns ``(payload, hdr)`` when a blob completes, else None.
+    At most ``max_partial`` blobs are held; under sustained frame loss (or a
+    partition mid-blob) the oldest partial is evicted, so reassembly state
+    stays bounded no matter how hostile the link. Single-consumer, like the
+    datapaths that own it."""
+
+    def __init__(self, max_partial: int = 64):
+        self.max_partial = max_partial
+        self._partial: Dict[int, dict] = {}
+        self._order: deque = deque()
+        self.evicted = 0  # partial blobs dropped at the bound
+
+    def ingest(self, frame: Any) -> Optional[tuple]:
+        if not (isinstance(frame, dict) and "_wire" in frame):
+            return None
+        blob_id, k, n_chunks = frame["_wire"]
+        st = self._partial.get(blob_id)
+        if st is None:
+            st = {"hdr": None, "chunks": {}, "n": n_chunks}
+            self._partial[blob_id] = st
+            self._order.append(blob_id)
+            while len(self._order) > self.max_partial:
+                if self._partial.pop(self._order.popleft(), None) is not None:
+                    self.evicted += 1
+        if frame.get("hdr") is not None:
+            st["hdr"] = frame["hdr"]
+        st["chunks"][k] = frame["data"]
+        if st["hdr"] is not None and len(st["chunks"]) == st["n"]:
+            self._partial.pop(blob_id, None)
+            payload = b"".join(st["chunks"][i] for i in range(st["n"]))
+            return payload, st["hdr"]
+        return None
+
+    def partial_count(self) -> int:
+        return len(self._partial)
 
 
 @dataclass
@@ -165,8 +213,7 @@ class _CompressDP(Datapath):
     def __init__(self, ch: CompressChunnel, inner: Optional[Datapath]):
         self.ch = ch
         self.inner = inner
-        self._partial: Dict[int, dict] = {}
-        self._partial_order: deque = deque()
+        self._reasm = Reassembler(max_partial=self.MAX_PARTIAL)
         self._ready: deque = deque()
 
     def send(self, msgs):
@@ -203,23 +250,10 @@ class _CompressDP(Datapath):
         return n_out
 
     def _ingest(self, frame) -> None:
-        if not (isinstance(frame, dict) and "_wire" in frame):
-            return
-        blob_id, k, n_chunks = frame["_wire"]
-        st = self._partial.get(blob_id)
-        if st is None:
-            st = {"hdr": None, "chunks": {}, "n": n_chunks}
-            self._partial[blob_id] = st
-            self._partial_order.append(blob_id)
-            while len(self._partial_order) > self.MAX_PARTIAL:
-                self._partial.pop(self._partial_order.popleft(), None)
-        if frame.get("hdr") is not None:
-            st["hdr"] = frame["hdr"]
-        st["chunks"][k] = frame["data"]
-        if st["hdr"] is not None and len(st["chunks"]) == st["n"]:
-            self._partial.pop(blob_id, None)
-            payload = b"".join(st["chunks"][i] for i in range(st["n"]))
-            self._ready.extend(decode_blob(payload, st["hdr"],
+        done = self._reasm.ingest(frame)
+        if done is not None:
+            payload, hdr = done
+            self._ready.extend(decode_blob(payload, hdr,
                                            use_kernel=self.ch.use_kernel))
 
     def _drain(self, buf, n_out: int) -> int:

@@ -147,6 +147,7 @@ class Fabric:
         self._lock = threading.Lock()
         # small data-plane lock serializing the shared RNG; held once per batch
         self._rng_lock = threading.Lock()
+        self._register_hooks: List[Callable[[str], None]] = []
         self.counters = FabricCounters()
 
     # -- control plane (registration lock) --------------------------------------
@@ -156,7 +157,10 @@ class Fabric:
                 raise ValueError(f"address in use: {addr}")
             ep = Endpoint(addr, self, capacity=self._capacity)
             self._eps[addr] = ep
-            return ep
+            hooks = tuple(self._register_hooks)
+        for cb in hooks:  # outside the lock: hooks may call set_link etc.
+            cb(addr)
+        return ep
 
     def unregister(self, addr: str) -> None:
         with self._lock:
@@ -165,6 +169,40 @@ class Fabric:
     def set_link(self, src: str, dst: str, model: LinkModel) -> None:
         with self._lock:
             self._links[(src, dst)] = model
+
+    def clear_link(self, src: str, dst: str) -> None:
+        """Remove a per-pair override so the pair reverts to the default link."""
+        with self._lock:
+            self._links.pop((src, dst), None)
+
+    def get_link(self, src: str, dst: str) -> LinkModel:
+        """Effective link model for a pair (override if set, else default)."""
+        with self._lock:
+            return self._links.get((src, dst), self._default)
+
+    def link_override(self, src: str, dst: str) -> Optional[LinkModel]:
+        """The per-pair override, or None if the pair rides the default link.
+        Fault injectors use this to save/restore state across heal events."""
+        with self._lock:
+            return self._links.get((src, dst))
+
+    def endpoints(self) -> List[str]:
+        """Snapshot of registered endpoint addresses (control plane only)."""
+        with self._lock:
+            return list(self._eps)
+
+    def add_register_hook(self, cb: Callable[[str], None]) -> None:
+        """Observe endpoint registration (chaos injection, service discovery).
+        Hooks run after the endpoint is routable, outside the fabric lock."""
+        with self._lock:
+            self._register_hooks.append(cb)
+
+    def remove_register_hook(self, cb: Callable[[str], None]) -> None:
+        with self._lock:
+            try:
+                self._register_hooks.remove(cb)
+            except ValueError:
+                pass
 
     # -- data plane (no registration lock) ---------------------------------------
     def send(self, src: str, dst: str, msg: Any) -> None:
@@ -298,13 +336,21 @@ class ReliableChannel:
         self._win_rx: Dict[Tuple[str, int], dict] = {}
         self._win_order: deque = deque()
         self._pending: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+        # advisory counters (plain ints riding the GIL, like FabricCounters):
+        # frames sent a 2nd+ time, and duplicate frames answered from cache
+        self.retransmits = 0
+        self.dup_replies = 0
 
     # -- client side -------------------------------------------------------------
-    def request(self, msg: Any) -> Any:
-        """Send reliably and wait for the (piggybacked) reply."""
+    def request(self, msg: Any, *, retries: Optional[int] = None) -> Any:
+        """Send reliably and wait for the (piggybacked) reply. ``retries``
+        overrides the channel default for this call (fail-fast probes)."""
         seq = _next_seq()
         frame = {"_seq": seq, "body": msg}
-        for _ in range(self.retries):
+        n_tries = self.retries if retries is None else retries
+        for attempt in range(n_tries):
+            if attempt:
+                self.retransmits += 1
             self.ep.send(self.peer, frame)
             deadline = time.monotonic() + self.timeout
             while True:
@@ -318,7 +364,7 @@ class ReliableChannel:
                 if isinstance(m, dict) and m.get("_ack") == seq and src == self.peer:
                     return m["body"]
                 self._pending.put((src, m))
-        raise TimeoutError(f"no reply from {self.peer} after {self.retries} retries")
+        raise TimeoutError(f"no reply from {self.peer} after {n_tries} retries")
 
     def request_window(self, msgs: Sequence[Any], *,
                        window: Optional[int] = None) -> List[Any]:
@@ -336,6 +382,7 @@ class ReliableChannel:
         seq2idx = {f["_seq"]: i for i, f in enumerate(frames)}
         replies: List[Any] = [None] * n
         acked = [False] * n
+        sent = [False] * n
         base = 0
         stalls = 0
         while True:
@@ -345,8 +392,12 @@ class ReliableChannel:
                 return replies
             hi = min(base + W, n)
             # go-back-N: (re)send every unacked frame in the window as a batch
-            self.ep.send_batch(self.peer,
-                               [frames[i] for i in range(base, hi) if not acked[i]])
+            resend = [i for i in range(base, hi) if not acked[i]]
+            for i in resend:
+                if sent[i]:
+                    self.retransmits += 1
+                sent[i] = True
+            self.ep.send_batch(self.peer, [frames[i] for i in resend])
             deadline = time.monotonic() + self.timeout
             progress = False
             while True:
@@ -401,6 +452,7 @@ class ReliableChannel:
             # Retransmission (our ack was lost): resend the cached reply so the
             # handler observes exactly-once semantics.
             reply = self._reply_cache.get((src, seq))
+            self.dup_replies += 1
         self._rx_seq[src] = max(last, seq)
         self.ep.send(src, {"_ack": seq, "body": reply})
         return True
@@ -424,6 +476,7 @@ class ReliableChannel:
                 self._win_rx.pop(self._win_order.popleft(), None)
         if idx < st["next"]:
             # retransmission of a processed frame: cached reply, handler not re-run
+            self.dup_replies += 1
             self.ep.send(src, {"_ack": m["_seq"], "_cum": st["next"] - 1,
                                "body": st["replies"].get(idx)})
             return True

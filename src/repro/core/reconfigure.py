@@ -296,6 +296,14 @@ class ReconfigParticipant:
         self._prepared: Optional[str] = None
         self._prepared_src: Optional[str] = None
         self._prepared_at: Optional[float] = None
+        self.resync_failures = 0  # epoch queries that timed out (chaos stat)
+
+    @property
+    def prepared(self) -> Optional[str]:
+        """Fingerprint this peer is currently prepared for (None once the
+        decision arrived or was resynced) — 'stranded' means non-None long
+        after the coordinator decided."""
+        return self._prepared
 
     def _clear_prepared(self) -> None:
         self._prepared = self._prepared_src = self._prepared_at = None
@@ -335,7 +343,10 @@ class ReconfigParticipant:
 
     def defer_resync(self) -> None:
         """Push the next resync attempt out by a full window (called when a
-        query itself timed out — don't hot-loop on an unreachable peer)."""
+        query itself timed out — don't hot-loop on an unreachable peer).
+        Counted in ``resync_failures``: under a coordinator partition this
+        climbs until heal, then the next window converges."""
+        self.resync_failures += 1
         if self._prepared_at is not None:
             self._prepared_at = self._now()
 

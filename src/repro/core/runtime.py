@@ -229,6 +229,11 @@ class HostAgent:
         self._participants[conn_id] = ReconfigParticipant(
             handle, resolve, resync_after_s=resync_after_s)
 
+    def participant(self, conn_id: str) -> Optional[ReconfigParticipant]:
+        """The registered participant for ``conn_id`` (chaos scenarios assert
+        on its ``prepared``/``epoch``/``resync_failures`` state)."""
+        return self._participants.get(conn_id)
+
     def coordinate(self, conn_id: str, handle: ConnHandle) -> None:
         """Record this agent as ``conn_id``'s 2PC coordinator so it can
         answer peers' ``reconfig_query`` resyncs from ``handle``'s live state
@@ -264,7 +269,9 @@ class HostAgent:
             msgs, window=window)
 
     def reconfigure_multilateral(self, handle: ConnHandle, new_stack: ConcreteStack,
-                                 peers: List[str], conn_id: str) -> bool:
+                                 peers: List[str], conn_id: str, *,
+                                 timeout: float = 0.1,
+                                 retries: int = 40) -> bool:
         """Switch a multilateral stack across all endpoints of ``conn_id``.
 
         Runs the two-phase commit with ``peers`` *inside* ``handle``'s switch
@@ -279,6 +286,11 @@ class HostAgent:
             peers: fabric addresses of the other endpoints.
             conn_id: the connection's group identity; peers registered it via
                 ``register_participant``.
+            timeout/retries: per-request reliability budget. The defaults
+                tolerate seconds of peer unreachability; chaos scenarios pass
+                a small budget so a coordinator crashed mid-commit releases
+                the switch point quickly (phase-2 stays presumed-commit
+                either way).
 
         Returns:
             True if all peers voted ready and the swap committed; False if
@@ -295,7 +307,8 @@ class HostAgent:
 
         def coordinate() -> bool:
             return two_phase_commit(
-                lambda p, m: self.request(p, {**m, "conn": conn_id}),
+                lambda p, m: self.request(p, {**m, "conn": conn_id},
+                                          timeout=timeout, retries=retries),
                 peers, fp, epoch=epoch,
                 on_decide=lambda: self.record_decision(conn_id, epoch, fp),
             )
