@@ -839,11 +839,27 @@ def emit_chaos_scenarios(*, fast: bool = False) -> dict:
     the partition-during-2PC scenario ends with zero stranded prepared peers
     and every survivor on one committed epoch. Shared by main() and
     run.py --smoke."""
-    res = {"regions": run_chaos_regions(fast=fast),
-           "partition_2pc": run_chaos_partition_2pc(fast=fast)}
-    CHAOS_OUT.parent.mkdir(parents=True, exist_ok=True)
-    CHAOS_OUT.write_text(json.dumps(res, indent=2, default=float))
+    from repro.obs.flight import RECORDER
+    from repro.obs.trace import TRACER
 
+    # trace the chaos runs so a failed acceptance assertion dumps the spans
+    # leading up to it (benchmarks/out/flightrec_chaos_smoke_assert.json)
+    was_enabled = TRACER.enabled
+    TRACER.enable()
+    try:
+        with RECORDER.capture("chaos_smoke"):
+            res = {"regions": run_chaos_regions(fast=fast),
+                   "partition_2pc": run_chaos_partition_2pc(fast=fast)}
+            CHAOS_OUT.parent.mkdir(parents=True, exist_ok=True)
+            CHAOS_OUT.write_text(json.dumps(res, indent=2, default=float))
+            _assert_chaos_acceptance(res)
+    finally:
+        if not was_enabled:
+            TRACER.disable()
+    return res
+
+
+def _assert_chaos_acceptance(res: dict) -> None:
     wan, dcn = res["regions"]["wan"], res["regions"]["dcn"]
     # lossy WAN region: switched by the link-health rule onto the WAN option,
     # whose capabilities spell out compressed (q8 blocks) + reliable (gbn)
@@ -868,7 +884,6 @@ def emit_chaos_scenarios(*, fast: bool = False) -> dict:
     assert len(set(p2["epochs"].values())) == 1, p2
     # the crash really blocked resync for a while (queries failed, then healed)
     assert sum(p2["resync_failures"].values()) >= 1, p2
-    return res
 
 
 def main() -> None:

@@ -100,6 +100,15 @@ def smoke() -> None:
           f"stranded={_p2['stranded_prepared']};"
           f"resync_failures={sum(_p2['resync_failures'].values())}")
 
+    # tracing plane: the disabled path must be ~free and the enabled path
+    # cheap at batch=64 (gates asserted inside run_tracing_overhead)
+    from benchmarks.bench_overhead import run_tracing_overhead
+
+    tr = run_tracing_overhead(batch=64, smoke=True)
+    print("smoke_tracing_overhead,0.00,"
+          f"enabled_overhead={tr['enabled_overhead']:.3f};"
+          f"disabled_guard_frac={tr['disabled_guard_frac']:.5f}")
+
     print("# smoke ok on jax compat paths:", file=sys.stderr)
     for line in compat.report().splitlines():
         print(f"#   {line}", file=sys.stderr)

@@ -15,6 +15,10 @@
 #                               benchmarks/out/chaos_scenarios.json) run
 #                               headless so the close-the-loop and failure
 #                               paths are tier-1
+#   5. observability smoke     — repro.obs CLI: KV-switch scenario traced end
+#                               to end; asserts the Chrome trace stitches one
+#                               causal trace across both endpoints and the
+#                               Prometheus export parses
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -35,5 +39,13 @@ echo "== data-plane throughput smoke =="
 # scaled-down batched-vs-per-message sweep; asserts the >=10x batch=64
 # speedup and writes benchmarks/out/dataplane.json (a CI artifact)
 python -m benchmarks.bench_dataplane --smoke
+
+echo "== observability smoke (stitched trace + metrics export) =="
+# runs the KV-switch scenario end to end, writes a Chrome trace_event JSON
+# and a Prometheus-text export, then re-parses both and asserts ONE stitched
+# trace covering controller decision -> negotiation -> 2PC -> swap on both
+# endpoints (docs/architecture.md §10)
+python -m repro.obs --trace benchmarks/out/kv_switch.trace.json \
+  --metrics benchmarks/out/metrics.prom --check
 
 echo "verify.sh: all green"

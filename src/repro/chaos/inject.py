@@ -38,6 +38,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.fabric import Fabric, LinkModel
+from repro.obs.trace import TRACER
 
 #: total isolation — applied per-pair for partitions and crashes
 BLACKHOLE = LinkModel(latency_s=0.0, jitter_s=0.0, loss=1.0)
@@ -315,6 +316,10 @@ class ChaosInjector:
                      "kind": ev.kind, "label": ev.label}
             entry.update(extra)
             self.log.append(entry)
+        if TRACER.enabled:
+            # outside self._lock: fault apply/heal instants land in the SAME
+            # timeline as the controller/2PC spans they perturb
+            TRACER.event(f"chaos.{ev.kind}", attrs=dict(entry))
 
 
 def _event_pairs(ev: ChaosEvent,

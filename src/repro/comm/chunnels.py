@@ -27,6 +27,7 @@ import numpy as np
 from repro.comm import collectives, compress
 from repro.core.capability import CapabilitySet
 from repro.core.chunnel import Chunnel, Datapath, WireType
+from repro.obs.trace import NOOP_SPAN, TRACER
 from repro.core.controller import (
     PolicyContext,
     Rule,
@@ -575,36 +576,46 @@ class _WanLinkDP(Datapath):
         msgs = list(msgs)
         if not msgs:
             return
-        frames: list = []
-        tensors: list = []
+        # ONE batch-level span (the span-in-hot-loop rule forbids per-frame
+        # spans here); chunk headers inherit its ctx inside chunk_payload,
+        # and the rc.window span underneath tags each retransmit retry=n.
+        sp = (TRACER.span("wan.send", attrs={"peer": self.ch.peer,
+                                             "n": len(msgs)})
+              if TRACER.enabled else NOOP_SPAN)
+        with sp:
+            frames: list = []
+            tensors: list = []
 
-        def flush_tensors():
-            if tensors:
-                frames.extend(encode_batch(
-                    tensors, block=self.ch.block,
-                    use_kernel=self.ch.use_kernel,
-                    chunk_bytes=self.ch.mtu_bytes))
-                tensors.clear()
+            def flush_tensors():
+                if tensors:
+                    frames.extend(encode_batch(
+                        tensors, block=self.ch.block,
+                        use_kernel=self.ch.use_kernel,
+                        chunk_bytes=self.ch.mtu_bytes))
+                    tensors.clear()
 
-        for m in msgs:
-            if _is_float_tensor(m):
-                tensors.append(m)  # contiguous runs share one device call
-            elif isinstance(m, (bytes, bytearray)):
-                flush_tensors()
-                frames.extend(chunk_payload(bytes(m), {"kind": "raw"},
-                                            chunk_bytes=self.ch.mtu_bytes))
-            else:
-                flush_tensors()
-                frames.append({"_obj": m})
-        flush_tensors()
-        self.msgs_sent += len(msgs)
-        self.frames_sent += len(frames)
-        try:
-            self._chan.request_window(frames)
-        except TimeoutError:
-            self.failed_sends += 1
-            raise
-        self._last_heard = time.monotonic()
+            for m in msgs:
+                if _is_float_tensor(m):
+                    tensors.append(m)  # contiguous runs share one device call
+                elif isinstance(m, (bytes, bytearray)):
+                    flush_tensors()
+                    frames.extend(chunk_payload(bytes(m), {"kind": "raw"},
+                                                chunk_bytes=self.ch.mtu_bytes))
+                else:
+                    flush_tensors()
+                    frames.append({"_obj": m})
+            flush_tensors()
+            self.msgs_sent += len(msgs)
+            self.frames_sent += len(frames)
+            sp.set(frames=len(frames))
+            try:
+                self._chan.request_window(frames)
+            except TimeoutError:
+                self.failed_sends += 1
+                # the batch is NOT delivered: close the span as a drop
+                sp.set(status="dropped", drop_reason="window_stalled")
+                raise
+            self._last_heard = time.monotonic()
 
     # -- receive: pump the reliable server side into the ready queue ----------
     def recv(self, buf, timeout=None):
@@ -635,6 +646,11 @@ class _WanLinkDP(Datapath):
                 done = self._reasm.ingest(body)
                 if done is not None:
                     payload, hdr = done
+                    if TRACER.enabled:
+                        TRACER.event("wire.reassembled",
+                                     attrs={"bytes": len(payload),
+                                            "kind": hdr.get("kind", "tensor")},
+                                     ctx=hdr.get("tc"))
                     if hdr.get("kind") == "raw":
                         self._ready.append(payload)
                     else:

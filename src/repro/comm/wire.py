@@ -32,6 +32,7 @@ from repro.core.chunnel import Chunnel, Datapath, WireType
 from repro.core.cost import CostModel
 from repro.kernels.quantize.ops import INTERPRET
 from repro.kernels.quantize.quantize import dequantize_blocks, quantize_blocks
+from repro.obs.trace import TRACER
 
 TENSOR = WireType.of("tensor", dtype="f32")
 BYTES = WireType.of("bytes")
@@ -82,7 +83,16 @@ def chunk_payload(payload: bytes, hdr: dict, *,
                   chunk_bytes: int = 1 << 16) -> List[dict]:
     """Split one blob into MTU-sized ``{"_wire": (id, k, n), "hdr", "data"}``
     fabric frames (header rides chunk 0 only). The generic framing layer under
-    both the compressed wire path and the WAN link chunnel."""
+    both the compressed wire path and the WAN link chunnel.
+
+    When tracing is enabled, the sender's current trace ctx rides the header
+    (``hdr["tc"]``) so the receive side can stitch reassembly — and eviction
+    under loss — back to the span that sent the blob."""
+    if TRACER.enabled:
+        tc = TRACER.ctx()
+        if tc is not None:
+            hdr = dict(hdr)  # never mutate the caller's header
+            hdr["tc"] = tc
     blob_id = _next_blob_id()
     n_chunks = max(1, -(-len(payload) // chunk_bytes))
     return [{"_wire": (blob_id, k, n_chunks),
@@ -159,8 +169,16 @@ class Reassembler:
             self._partial[blob_id] = st
             self._order.append(blob_id)
             while len(self._order) > self.max_partial:
-                if self._partial.pop(self._order.popleft(), None) is not None:
+                victim = self._partial.pop(self._order.popleft(), None)
+                if victim is not None:
                     self.evicted += 1
+                    if TRACER.enabled:
+                        # close the sender's span story: the blob died here
+                        TRACER.event(
+                            "wire.evicted",
+                            attrs={"drop_reason": "reassembly_overflow",
+                                   "chunks_held": len(victim["chunks"])},
+                            ctx=(victim.get("hdr") or {}).get("tc"))
         if frame.get("hdr") is not None:
             st["hdr"] = frame["hdr"]
         st["chunks"][k] = frame["data"]
@@ -253,6 +271,13 @@ class _CompressDP(Datapath):
         done = self._reasm.ingest(frame)
         if done is not None:
             payload, hdr = done
+            if TRACER.enabled:
+                # parented to the SENDER's span via the header trace ctx:
+                # this is where a trace crosses chunking + reassembly
+                TRACER.event("wire.reassembled",
+                             attrs={"bytes": len(payload),
+                                    "msgs": len(hdr.get("shapes") or ())},
+                             ctx=hdr.get("tc"))
             self._ready.extend(decode_blob(payload, hdr,
                                            use_kernel=self.ch.use_kernel))
 

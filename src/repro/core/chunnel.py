@@ -27,6 +27,7 @@ from typing import Any, Iterable, Optional, Sequence
 
 from repro.core.capability import CapabilitySet
 from repro.core.cost import NEUTRAL, CostModel
+from repro.obs.trace import TRACER
 
 
 @dataclass(frozen=True)
@@ -183,6 +184,9 @@ class _FnDatapath(Datapath):
         if not isinstance(msgs, list):
             msgs = list(msgs)
         out = self._send_batch(msgs) if self._send_batch else msgs
+        if TRACER.enabled:  # batch-level only: see the span-in-hot-loop rule
+            TRACER.record_batch("chunnel.send", len(msgs), len(out),
+                                {"chunnel": self.ch.fn_name})
         if self.inner is not None:
             self.inner.send(out)
 
@@ -194,4 +198,7 @@ class _FnDatapath(Datapath):
             out = self._recv_batch(buf[:n])
             n = min(len(out), len(buf))
             buf[:n] = out[:n]
+        if TRACER.enabled and n:
+            TRACER.record_batch("chunnel.recv", n, n,
+                                {"chunnel": self.ch.fn_name})
         return n

@@ -62,6 +62,28 @@ from repro.core.cost import (
     stack_cost,
     target_label,
 )
+from repro.obs.trace import NOOP_SPAN, TRACER
+
+
+class _SnoopDict(dict):
+    """Snapshot view recording which keys a rule predicate actually read.
+
+    Only used while tracing is enabled: the controller span's
+    ``predicates`` attribute carries exactly the metric values the armed
+    rule's predicate consulted — the *why it fired* evidence — without
+    dumping the whole snapshot into every span."""
+
+    def __init__(self, base: dict):
+        super().__init__(base)
+        self.read = set()
+
+    def get(self, key, default=None):
+        self.read.add(key)
+        return super().get(key, default)
+
+    def __getitem__(self, key):
+        self.read.add(key)
+        return super().__getitem__(key)
 
 
 def above(metric: str, threshold: float) -> Callable[[dict], bool]:
@@ -203,37 +225,57 @@ class ReconfigController:
         self._ticks += 1
         now = self._now()
         cur = self.current()
+        tracing = TRACER.enabled
+        snap_view = _SnoopDict(snapshot) if tracing else snapshot
         armed: Optional[Rule] = None
         for r in self.rules:  # priority order; streaks advance for ALL rules
-            if r.when(snapshot):
+            if r.when(snap_view):
                 self._streak[r.name] += 1
             else:
                 self._streak[r.name] = 0
             if armed is None and self._streak[r.name] >= r.hold:
                 armed = r
-        target = label = None
-        if armed is not None:
-            target = resolve_target(armed.target, snapshot, cur)
-            label = target_label(target)
-        if armed is None or label == cur:
-            d = Decision(self._ticks, now,
-                         armed.name if armed else None, label,
-                         False, False, "idle", snapshot)
-        elif self.in_cooldown():
-            d = Decision(self._ticks, now, armed.name, label,
-                         False, False, "cooldown", snapshot)
-        else:
-            committed = bool(self.switch(target))
-            if committed:
-                self._last_switch_t = now
-                for k in self._streak:  # re-arm from scratch after a transition
-                    self._streak[k] = 0
-            self.total_fired += 1
-            self.total_committed += int(committed)
-            self.fired_by_rule[armed.name] += 1
-            d = Decision(self._ticks, now, armed.name, label,
-                         True, committed, "switched" if committed else "refused",
-                         snapshot)
+        # One span per ARMED tick (idle ticks are the steady state and would
+        # drown the ring); it wraps resolve + switch so the 2PC/swap spans
+        # nest under the controller decision that caused them.
+        sp = NOOP_SPAN
+        if tracing and armed is not None:
+            sp = TRACER.span("controller.tick", attrs={
+                "tick": self._ticks,
+                "rule": armed.name,
+                "streak": self._streak[armed.name],
+                "current": cur,
+                # why it fired: the metric values the predicates consulted
+                "predicates": {k: snapshot.get(k)
+                               for k in sorted(snap_view.read, key=str)},
+            })
+        with sp:
+            target = label = None
+            if armed is not None:
+                target = resolve_target(armed.target, snapshot, cur)
+                label = target_label(target)
+                sp.set(target=label)
+            if armed is None or label == cur:
+                d = Decision(self._ticks, now,
+                             armed.name if armed else None, label,
+                             False, False, "idle", snapshot)
+            elif self.in_cooldown():
+                sp.set(reason="cooldown")
+                d = Decision(self._ticks, now, armed.name, label,
+                             False, False, "cooldown", snapshot)
+            else:
+                committed = bool(self.switch(target))
+                if committed:
+                    self._last_switch_t = now
+                    for k in self._streak:  # re-arm from scratch after a transition
+                        self._streak[k] = 0
+                self.total_fired += 1
+                self.total_committed += int(committed)
+                self.fired_by_rule[armed.name] += 1
+                d = Decision(self._ticks, now, armed.name, label,
+                             True, committed, "switched" if committed else "refused",
+                             snapshot)
+            sp.set(reason=d.reason)
         self.decisions.append(d)
         return d
 

@@ -31,6 +31,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, List, Optional, Sequence, Tuple
 
+from repro.obs.trace import NOOP_SPAN, TRACER
+
 
 def target_label(target: Any) -> str:
     """Stable identity of a switch target: a ConcreteStack's fingerprint, or
@@ -214,13 +216,25 @@ class ScoredTarget:
     def resolve(self, snapshot: Optional[dict] = None,
                 current_label: Optional[str] = None) -> Any:
         """The argmax-utility candidate's target under ``snapshot``."""
-        ranked = rank(self.candidates, self.objective, snapshot, current_label)
-        best_u, best = ranked[0]
-        if current_label is not None and best.label != current_label:
-            cur = next(((u, c) for u, c in ranked if c.label == current_label), None)
-            if cur is not None and best_u <= cur[0] + self.margin * abs(cur[0]):
-                return cur[1].target
-        return best.target
+        sp = (TRACER.span("negotiate.score",
+                          attrs={"objective": self.objective.name,
+                                 "current": current_label})
+              if TRACER.enabled else NOOP_SPAN)
+        with sp:
+            ranked = rank(self.candidates, self.objective, snapshot,
+                          current_label)
+            best_u, best = ranked[0]
+            # per-candidate utilities: the trace's record of which stacks
+            # lost the scoring round and by how much
+            sp.set(scores={c.label: u for u, c in ranked},
+                   chosen=best.label)
+            if current_label is not None and best.label != current_label:
+                cur = next(((u, c) for u, c in ranked
+                            if c.label == current_label), None)
+                if cur is not None and best_u <= cur[0] + self.margin * abs(cur[0]):
+                    sp.set(chosen=current_label, reason="margin_hold")
+                    return cur[1].target
+            return best.target
 
     def __repr__(self):
         return (f"ScoredTarget({len(self.candidates)} candidates, "

@@ -19,9 +19,12 @@ import queue
 import random
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.trace import TRACER
 
 
 @dataclass
@@ -46,6 +49,11 @@ class FabricCounters:
     sent_bytes: int = 0
     delivered_bytes: int = 0
 
+    #: Pre-split aliases still found in older dashboards/scripts → the
+    #: canonical split field they read today. The exporter schema
+    #: (repro.obs.metrics) only ever sees snapshot()'s canonical names.
+    LEGACY_ALIASES = {"sent_msgs": "sent", "sent_bytes": "sent_bytes"}
+
     def snapshot(self) -> dict:
         return {
             "sent": self.sent,
@@ -56,6 +64,22 @@ class FabricCounters:
             "sent_bytes": self.sent_bytes,
             "delivered_bytes": self.delivered_bytes,
         }
+
+    def legacy(self, name: str) -> int:
+        """Single deprecation funnel for pre-split counter names.
+
+        Every legacy surface (``Fabric.sent_msgs``/``Fabric.sent_bytes``)
+        routes here so there is exactly one warning site to delete when
+        the aliases are removed."""
+        try:
+            canon = self.LEGACY_ALIASES[name]
+        except KeyError:
+            raise AttributeError(f"unknown legacy counter alias: {name!r}")
+        warnings.warn(
+            f"counter alias {name!r} is deprecated; read the split name "
+            f"{canon!r} via FabricCounters.snapshot()",
+            DeprecationWarning, stacklevel=3)
+        return getattr(self, canon)
 
 
 class Endpoint:
@@ -109,11 +133,21 @@ class Endpoint:
             if want >= avail:
                 buf[:avail] = self._ring  # bulk drain, C-level iteration
                 self._ring.clear()
-                return avail
-            pop = self._ring.popleft
-            for i in range(want):
-                buf[i] = pop()
-            return want
+                n = avail
+            else:
+                pop = self._ring.popleft
+                for i in range(want):
+                    buf[i] = pop()
+                n = want
+        # Record only short reads (outside the ring lock): a full read is the
+        # steady state and already visible from the sender's record — skipping
+        # it keeps the enabled-tracing cost at one record per round trip
+        # (bench_overhead gates <10% at batch=64). A short read marks the tail
+        # of a burst (or starvation), which is the receiver-side event worth a
+        # timeline instant.
+        if n < want and TRACER.enabled:
+            TRACER.record_batch("fabric.recv_many", n, n)
+        return n
 
     def _deliver_batch(self, items: Sequence[Tuple[str, Any]]) -> int:
         """Fabric-side delivery: append a batch, notify waiters once. Returns
@@ -233,6 +267,9 @@ class Fabric:
         c.sent_bytes += sum(sizes)
         if ep is None:
             c.dropped_unroutable += len(msgs)
+            if TRACER.enabled:  # dropped batches close with a drop_reason
+                TRACER.record_batch("fabric.send_batch", len(msgs), 0,
+                                    {"dst": dst, "drop_reason": "unroutable"})
             return 0
         if mask is None:
             kept = msgs  # not mutated downstream: items/sizes are derived views
@@ -241,6 +278,10 @@ class Fabric:
             kept = [x for x, keep in zip(msgs, mask) if keep]
             kept_sizes = [s for s, keep in zip(sizes, mask) if keep]
             c.dropped_loss += len(msgs) - len(kept)
+        if TRACER.enabled:  # one tuple per batch, never per message (§10)
+            TRACER.record_batch(
+                "fabric.send_batch", len(msgs), len(kept),
+                {"drop_reason": "loss"} if len(kept) < len(msgs) else None)
         if not kept:
             return 0
         items = [(src, x) for x in kept]
@@ -260,15 +301,18 @@ class Fabric:
         c.delivered += accepted
         c.dropped_overflow += len(items) - accepted
         c.delivered_bytes += sum(sizes) if accepted == len(items) else sum(sizes[:accepted])
+        if accepted < len(items) and TRACER.enabled:
+            TRACER.record_batch("fabric.deliver", len(items), accepted,
+                                {"dst": ep.addr, "drop_reason": "overflow"})
 
-    # -- legacy accounting aliases ----------------------------------------------
+    # -- legacy accounting aliases (deprecated: read counters.snapshot()) --------
     @property
     def sent_msgs(self) -> int:
-        return self.counters.sent
+        return self.counters.legacy("sent_msgs")
 
     @property
     def sent_bytes(self) -> int:
-        return self.counters.sent_bytes
+        return self.counters.legacy("sent_bytes")
 
 
 def approx_size(msg: Any) -> int:
@@ -347,10 +391,17 @@ class ReliableChannel:
         overrides the channel default for this call (fail-fast probes)."""
         seq = _next_seq()
         frame = {"_seq": seq, "body": msg}
+        # The frame dict is built ONCE: a retransmission reuses the same
+        # "_tc", so the wire span id is stable across retries by design.
+        sp = TRACER.begin_span("rc.request",
+                               attrs={"peer": self.peer, "seq": seq})
+        if sp:
+            frame["_tc"] = sp.ctx
         n_tries = self.retries if retries is None else retries
         for attempt in range(n_tries):
             if attempt:
                 self.retransmits += 1
+                sp.event("retransmit", retry=attempt)
             self.ep.send(self.peer, frame)
             deadline = time.monotonic() + self.timeout
             while True:
@@ -362,8 +413,10 @@ class ReliableChannel:
                     break
                 src, m = got
                 if isinstance(m, dict) and m.get("_ack") == seq and src == self.peer:
+                    sp.end()
                     return m["body"]
                 self._pending.put((src, m))
+        sp.end(status="timeout", drop_reason="no_reply", retries=n_tries)
         raise TimeoutError(f"no reply from {self.peer} after {n_tries} retries")
 
     def request_window(self, msgs: Sequence[Any], *,
@@ -379,16 +432,27 @@ class ReliableChannel:
         win_id = _next_seq()
         frames = [{"_seq": _next_seq(), "_win": (win_id, i, n), "body": b}
                   for i, b in enumerate(msgs)]
+        # One span for the whole window; every frame carries the same
+        # "_tc" and the dicts are reused on go-back-N resends, so a
+        # retransmitted frame keeps its original span id (tagged retry=n
+        # below) instead of minting a new identity per attempt.
+        sp = TRACER.begin_span("rc.window",
+                               attrs={"peer": self.peer, "n": n, "win": win_id})
+        if sp:
+            tc = sp.ctx
+            for f in frames:
+                f["_tc"] = tc
         seq2idx = {f["_seq"]: i for i, f in enumerate(frames)}
         replies: List[Any] = [None] * n
         acked = [False] * n
-        sent = [False] * n
+        sent = [0] * n  # per-frame send counts (retry=sent[i] on resend)
         base = 0
         stalls = 0
         while True:
             while base < n and acked[base]:
                 base += 1
             if base >= n:
+                sp.end()
                 return replies
             hi = min(base + W, n)
             # go-back-N: (re)send every unacked frame in the window as a batch
@@ -396,7 +460,8 @@ class ReliableChannel:
             for i in resend:
                 if sent[i]:
                     self.retransmits += 1
-                sent[i] = True
+                    sp.event("retransmit", frame=i, retry=sent[i])
+                sent[i] += 1
             self.ep.send_batch(self.peer, [frames[i] for i in resend])
             deadline = time.monotonic() + self.timeout
             progress = False
@@ -424,6 +489,8 @@ class ReliableChannel:
             else:
                 stalls += 1
                 if stalls >= self.retries:
+                    sp.end(status="timeout", drop_reason="window_stalled",
+                           acked=sum(acked))
                     raise TimeoutError(
                         f"window to {self.peer} stalled after {self.retries} retries")
 
@@ -446,7 +513,14 @@ class ReliableChannel:
         seq = m["_seq"]
         last = self._rx_seq.get(src, 0)
         if seq > last:
-            reply = handler(src, m["body"])
+            tc = m.get("_tc") if TRACER.enabled else None
+            if tc is not None:
+                # re-parent the handler's spans under the sender's span so
+                # one trace stitches across endpoints
+                with TRACER.adopt(tc):
+                    reply = handler(src, m["body"])
+            else:
+                reply = handler(src, m["body"])
             self._cache_reply(src, seq, reply)
         else:
             # Retransmission (our ack was lost): resend the cached reply so the
@@ -484,7 +558,12 @@ class ReliableChannel:
         acks = []
         while st["next"] in st["held"]:
             f = st["held"].pop(st["next"])
-            reply = handler(src, f["body"])
+            tc = f.get("_tc") if TRACER.enabled else None
+            if tc is not None:
+                with TRACER.adopt(tc):
+                    reply = handler(src, f["body"])
+            else:
+                reply = handler(src, f["body"])
             st["replies"][st["next"]] = reply
             acks.append({"_ack": f["_seq"], "body": reply})
             st["next"] += 1

@@ -34,6 +34,7 @@ from repro.core.capability import CapabilitySet
 from repro.core.cost import DEFAULT_OBJECTIVE, Objective, score_stack
 from repro.core.fabric import ReliableChannel
 from repro.core.stack import ConcreteStack, Stack, offered_capabilities
+from repro.obs.trace import NOOP_SPAN, TRACER
 
 
 class NegotiationError(RuntimeError):
@@ -66,6 +67,7 @@ def pick_compatible(
     snapshot: Optional[dict] = None,
     objective: Optional[Objective] = None,
     mode: str = "scored",
+    scores: Optional[dict] = None,
 ) -> Optional[Tuple[ConcreteStack, int]]:
     """Server side of §5.2, multi-objective: among ALL capability-compatible
     (server option, client option) pairs, pick the server option whose folded
@@ -79,7 +81,9 @@ def pick_compatible(
     (kept for the scored-vs-first comparison in bench_reconfigure).
 
     Returns (server_choice, client_option_index) or None when no pair is
-    compatible.
+    compatible. ``scores`` (when given a dict) is filled with the
+    per-candidate utilities ``{server_fp: u}`` — the negotiation span
+    records them so a trace explains *which* stacks lost and by how much.
     """
     pairs = compatible_pairs(server_stack, client_offer)
     if not pairs:
@@ -90,6 +94,8 @@ def pick_compatible(
     best, best_u = None, float("-inf")
     for s_opt, idx in pairs:  # strict > keeps preference order on ties
         u = score_stack(s_opt, obj, snapshot)
+        if scores is not None:
+            scores[s_opt.fingerprint()] = u
         if u > best_u:
             best, best_u = (s_opt, idx), u
     return best
@@ -131,32 +137,39 @@ def client_negotiate(
     cache: Optional[ZeroRttCache] = None,
 ) -> NegotiatedConn:
     peer = chan.peer
-    if cache is not None:
-        fp = cache.get(peer, stack)
-        if fp is not None and stack.find(fp) is not None:
-            reply = chan.request({"type": "zero_rtt", "fp": fp})
-            if reply.get("type") == "zero_rtt_ok":
-                return NegotiatedConn(stack.find(fp), reply["nonce"], zero_rtt=True)
-            if reply.get("type") == "negotiate_failed":
-                cache.invalidate(peer, stack)  # tear down; fall through to 1-RTT
-            # else: fall through
+    with (TRACER.span("negotiate.client", attrs={"peer": peer})
+          if TRACER.enabled else NOOP_SPAN) as sp:
+        if cache is not None:
+            fp = cache.get(peer, stack)
+            if fp is not None and stack.find(fp) is not None:
+                reply = chan.request({"type": "zero_rtt", "fp": fp})
+                if reply.get("type") == "zero_rtt_ok":
+                    sp.set(zero_rtt=True, fp=fp)
+                    return NegotiatedConn(stack.find(fp), reply["nonce"],
+                                          zero_rtt=True)
+                if reply.get("type") == "negotiate_failed":
+                    cache.invalidate(peer, stack)  # tear down; fall through to 1-RTT
+                # else: fall through
 
-    offer = stack.offer()
-    reply = chan.request({
-        "type": "offer",
-        "options": offer,
-        # real fingerprints, index-aligned with options: the server caches the
-        # chosen one so 0-RTT resumption reproduces the 1-RTT nonce exactly
-        "fps": [opt.fingerprint() for opt in stack.options()],
-    })
-    if reply.get("type") == "reject":
-        raise NegotiationError(f"server rejected: {reply.get('reason')}")
-    if reply.get("type") != "accept":
-        raise NegotiationError(f"unexpected reply: {reply}")
-    chosen = stack.options()[reply["client_idx"]]
-    if cache is not None:
-        cache.put(peer, stack, chosen.fingerprint())
-    return NegotiatedConn(chosen, reply["nonce"])
+        offer = stack.offer()
+        reply = chan.request({
+            "type": "offer",
+            "options": offer,
+            # real fingerprints, index-aligned with options: the server caches the
+            # chosen one so 0-RTT resumption reproduces the 1-RTT nonce exactly
+            "fps": [opt.fingerprint() for opt in stack.options()],
+        })
+        if reply.get("type") == "reject":
+            sp.set(status="rejected", reason=reply.get("reason"))
+            raise NegotiationError(f"server rejected: {reply.get('reason')}")
+        if reply.get("type") != "accept":
+            sp.set(status="error")
+            raise NegotiationError(f"unexpected reply: {reply}")
+        chosen = stack.options()[reply["client_idx"]]
+        if cache is not None:
+            cache.put(peer, stack, chosen.fingerprint())
+        sp.set(zero_rtt=False, fp=chosen.fingerprint(), nonce=reply["nonce"])
+        return NegotiatedConn(chosen, reply["nonce"])
 
 
 class ServerNegotiator:
@@ -191,44 +204,65 @@ class ServerNegotiator:
     def handle(self, src: str, msg: dict) -> dict:
         t = msg.get("type")
         if t == "offer":
-            snap = self._snapshot()
-            mode = ("scored" if (self.objective is not None or snap is not None)
-                    else "first")
-            picked = pick_compatible(self.stack, msg["options"],
-                                     snapshot=snap, objective=self.objective,
-                                     mode=mode)
-            if picked is None:
-                return {"type": "reject", "reason": "no compatible stack"}
-            s_opt, c_idx = picked
-            # Cache the client's REAL fingerprint (sent index-aligned with the
-            # offer) for 0-RTT resumption: the client caches
-            # chosen.fingerprint() on its side, so both ends must derive the
-            # nonce from the same string or resumption mints a different nonce
-            # than the original negotiation. repr(desc) is only a last-resort
-            # fallback for pre-fps clients (their 0-RTT will renegotiate).
-            fps = msg.get("fps") or []
-            client_fp = fps[c_idx] if c_idx < len(fps) else repr(msg["options"][c_idx])
-            self._last[src] = client_fp
-            self.negotiated[src] = s_opt
-            return {
-                "type": "accept",
-                "client_idx": c_idx,
-                "server_fp": s_opt.fingerprint(),
-                "nonce": _nonce(s_opt.fingerprint(), client_fp),
-            }
+            sp = (TRACER.span("negotiate.offer", attrs={"peer": src})
+                  if TRACER.enabled else NOOP_SPAN)
+            with sp:
+                return self._handle_offer(src, msg, sp)
         if t == "zero_rtt":
+            return self._handle_zero_rtt(src, msg)
+        return {"type": "reject", "reason": f"unknown message {t}"}
+
+    def _handle_offer(self, src: str, msg: dict, sp) -> dict:
+        snap = self._snapshot()
+        mode = ("scored" if (self.objective is not None or snap is not None)
+                else "first")
+        scores: Optional[dict] = {} if TRACER.enabled else None
+        picked = pick_compatible(self.stack, msg["options"],
+                                 snapshot=snap, objective=self.objective,
+                                 mode=mode, scores=scores)
+        if picked is None:
+            sp.set(mode=mode, status="rejected",
+                   reason="no compatible stack")
+            return {"type": "reject", "reason": "no compatible stack"}
+        s_opt, c_idx = picked
+        # Cache the client's REAL fingerprint (sent index-aligned with the
+        # offer) for 0-RTT resumption: the client caches
+        # chosen.fingerprint() on its side, so both ends must derive the
+        # nonce from the same string or resumption mints a different nonce
+        # than the original negotiation. repr(desc) is only a last-resort
+        # fallback for pre-fps clients (their 0-RTT will renegotiate).
+        fps = msg.get("fps") or []
+        client_fp = fps[c_idx] if c_idx < len(fps) else repr(msg["options"][c_idx])
+        self._last[src] = client_fp
+        self.negotiated[src] = s_opt
+        # per-candidate utilities are THE evidence for why this stack
+        # won — they ride the span so traces explain the choice
+        sp.set(mode=mode, chosen=s_opt.fingerprint(), client_idx=c_idx,
+               candidates=scores)
+        return {
+            "type": "accept",
+            "client_idx": c_idx,
+            "server_fp": s_opt.fingerprint(),
+            "nonce": _nonce(s_opt.fingerprint(), client_fp),
+        }
+
+    def _handle_zero_rtt(self, src: str, msg: dict) -> dict:
+        with (TRACER.span("negotiate.zero_rtt", attrs={"peer": src})
+              if TRACER.enabled else NOOP_SPAN) as sp:
             cached = self._last.get(src)
             server_choice = self.negotiated.get(src)
             # Validate the client's claim against OUR cache of what was agreed
             # — resuming a stack we never negotiated must fall back to 1-RTT.
             if cached is None or server_choice is None or msg.get("fp") != cached:
+                sp.set(status="fallback", reason="unknown or stale claim")
                 return {"type": "negotiate_failed", "proposal": self.stack.offer()[:1]}
             # Re-validate that the previously negotiated server stack is still
             # on offer (our own Select preferences may have changed since).
             if self.stack.find(server_choice.fingerprint()) is not None:
+                sp.set(fp=server_choice.fingerprint())
                 return {
                     "type": "zero_rtt_ok",
                     "nonce": _nonce(server_choice.fingerprint(), cached),
                 }
+            sp.set(status="fallback", reason="stack no longer offered")
             return {"type": "negotiate_failed", "proposal": self.stack.offer()[:1]}
-        return {"type": "reject", "reason": f"unknown message {t}"}

@@ -44,6 +44,7 @@ from repro.core.chunnel import Datapath
 from repro.core.fabric import approx_size
 from repro.core.stack import ConcreteStack
 from repro.core.telemetry import ConnTelemetry
+from repro.obs.trace import NOOP_SPAN, TRACER
 
 
 @dataclass
@@ -73,10 +74,14 @@ class ConnHandle:
     def _record_send(self, msgs, t0: float) -> None:
         self.telemetry.record_send(len(msgs), sum(map(approx_size, msgs)),
                                    time.perf_counter() - t0)
+        if TRACER.enabled:  # batch-level record only (lint: span-in-hot-loop)
+            TRACER.record_batch("conn.send", len(msgs), len(msgs))
 
     def _record_recv(self, buf, n: int) -> None:
         if n:
             self.telemetry.record_recv(n, sum(approx_size(m) for m in buf[:n]))
+            if TRACER.enabled:
+                TRACER.record_batch("conn.recv", n, n)
 
     # -- control plane --------------------------------------------------------
     def reconfigure(self, new_stack: ConcreteStack,
@@ -111,22 +116,29 @@ class ConnHandle:
         # (e.g. GradCompressed error-feedback residuals dropped when switching
         # to a shorter stack) and spuriously migrates unchanged layers that
         # merely moved position.
-        old_by_name: dict = {}
-        for ch in self.stack.chunnels:
-            old_by_name.setdefault(ch.name, ch)
-        state = {}
-        for new_ch in new_stack.chunnels:
-            old_ch = old_by_name.get(new_ch.name)
-            if old_ch is None or type(old_ch) is not type(new_ch):
-                state.update(new_ch.migrate_state(self.dp))
-        old_dp = self.dp
-        self.dp = new_stack.instantiate()
-        if state and hasattr(self.dp, "restore_state"):
-            self.dp.restore_state(state)
-        if hasattr(old_dp, "close"):
-            old_dp.close()
-        self.stack = new_stack
-        self.stats.switches += 1
+        sp = (TRACER.span("reconfig.swap",
+                          attrs={"old": self.stack.fingerprint(),
+                                 "new": new_stack.fingerprint(),
+                                 "mechanism": type(self).__name__})
+              if TRACER.enabled else NOOP_SPAN)
+        with sp:
+            old_by_name: dict = {}
+            for ch in self.stack.chunnels:
+                old_by_name.setdefault(ch.name, ch)
+            state = {}
+            for new_ch in new_stack.chunnels:
+                old_ch = old_by_name.get(new_ch.name)
+                if old_ch is None or type(old_ch) is not type(new_ch):
+                    state.update(new_ch.migrate_state(self.dp))
+            old_dp = self.dp
+            self.dp = new_stack.instantiate()
+            if state and hasattr(self.dp, "restore_state"):
+                self.dp.restore_state(state)
+            if hasattr(old_dp, "close"):
+                old_dp.close()
+            self.stack = new_stack
+            self.stats.switches += 1
+            sp.set(migrated_keys=sorted(state))
 
 
 class LockedConn(ConnHandle):
@@ -157,6 +169,10 @@ class LockedConn(ConnHandle):
                 return False
             self._do_swap(new_stack)
         self.stats.last_switch_s = time.perf_counter() - t0
+        if TRACER.enabled:
+            TRACER.event("reconfig.blip",
+                         attrs={"mechanism": "LockedConn",
+                                "blip_s": self.stats.last_switch_s})
         return True
 
 
@@ -207,6 +223,10 @@ class BarrierConn(ConnHandle):
             self._barrier.reset()
             self._resume.set()
             self.stats.last_switch_s = time.perf_counter() - t0
+            if TRACER.enabled:
+                TRACER.event("reconfig.blip",
+                             attrs={"mechanism": "BarrierConn",
+                                    "blip_s": self.stats.last_switch_s})
 
 
 # ---------------------------------------------------------------------------
@@ -241,29 +261,43 @@ def two_phase_commit(chan_request: Callable[[str, dict], dict], peers: List[str]
     abort, clear its prepared state, and refuse the real commit when it
     lands."""
     ready = []
-    for p in peers:
-        try:
-            r = chan_request(p, {"type": "reconfig_prepare", "fp": new_fp})
-        except TimeoutError:
-            r = {"type": "reconfig_refuse"}
-        if r.get("type") != "reconfig_ready":
-            for q in ready:
-                try:
-                    chan_request(q, {"type": "reconfig_abort", "fp": new_fp})
-                except TimeoutError:
-                    pass  # abort is also just a notification of a made decision
-            return False
-        ready.append(p)
+    sp = (TRACER.span("2pc.prepare", attrs={"fp": new_fp, "peers": list(peers)})
+          if TRACER.enabled else NOOP_SPAN)
+    with sp:
+        for p in peers:
+            try:
+                r = chan_request(p, {"type": "reconfig_prepare", "fp": new_fp})
+            except TimeoutError:
+                r = {"type": "reconfig_refuse"}
+            sp.event("vote", peer=p, vote=r.get("type"))
+            if r.get("type") != "reconfig_ready":
+                sp.set(status="aborted", aborted_by=p)
+                for q in ready:
+                    try:
+                        chan_request(q, {"type": "reconfig_abort", "fp": new_fp})
+                    except TimeoutError:
+                        pass  # abort is also just a notification of a made decision
+                return False
+            ready.append(p)
+    if TRACER.enabled:
+        # the presumed-commit point: after the last ready vote, before any
+        # phase-2 notification (the decision exists even if none land)
+        TRACER.event("2pc.decide", attrs={"fp": new_fp, "epoch": epoch})
     if on_decide is not None:
         on_decide()
     commit = {"type": "reconfig_commit", "fp": new_fp}
     if epoch is not None:
         commit["epoch"] = epoch
-    for p in peers:
-        try:
-            chan_request(p, commit)
-        except TimeoutError:
-            pass  # decision already made; see docstring
+    sp = (TRACER.span("2pc.commit", attrs={"fp": new_fp, "epoch": epoch})
+          if TRACER.enabled else NOOP_SPAN)
+    with sp:
+        for p in peers:
+            try:
+                chan_request(p, commit)
+                sp.event("notified", peer=p)
+            except TimeoutError:
+                sp.event("notify_lost", peer=p, drop_reason="timeout")
+                # decision already made; see docstring
     return True
 
 
@@ -311,20 +345,32 @@ class ReconfigParticipant:
     def handle_msg(self, src: str, msg: dict) -> dict:
         t = msg.get("type")
         if t == "reconfig_prepare":
-            st = self.resolve(msg["fp"])
-            if st is None:
-                return {"type": "reconfig_refuse"}
-            self._prepared = msg["fp"]
-            self._prepared_src = src
-            self._prepared_at = self._now()
-            return {"type": "reconfig_ready"}
+            with (TRACER.span("2pc.peer.prepare",
+                              attrs={"coordinator": src, "fp": msg["fp"]})
+                  if TRACER.enabled else NOOP_SPAN) as sp:
+                st = self.resolve(msg["fp"])
+                if st is None:
+                    sp.set(vote="reconfig_refuse")
+                    return {"type": "reconfig_refuse"}
+                self._prepared = msg["fp"]
+                self._prepared_src = src
+                self._prepared_at = self._now()
+                sp.set(vote="reconfig_ready")
+                return {"type": "reconfig_ready"}
         if t == "reconfig_commit" and self._prepared == msg["fp"]:
-            st = self.resolve(msg["fp"])
-            self.handle.reconfigure(st)
-            self.epoch = int(msg.get("epoch") or self.epoch + 1)
-            self._clear_prepared()
-            return {"type": "reconfig_done"}
+            with (TRACER.span("2pc.peer.commit",
+                              attrs={"coordinator": src, "fp": msg["fp"]})
+                  if TRACER.enabled else NOOP_SPAN) as sp:
+                st = self.resolve(msg["fp"])
+                self.handle.reconfigure(st)  # nests the peer's reconfig.swap
+                self.epoch = int(msg.get("epoch") or self.epoch + 1)
+                self._clear_prepared()
+                sp.set(epoch=self.epoch)
+                return {"type": "reconfig_done"}
         if t == "reconfig_abort":
+            if TRACER.enabled:
+                TRACER.event("2pc.peer.abort",
+                             attrs={"coordinator": src, "fp": msg.get("fp")})
             self._clear_prepared()
             return {"type": "reconfig_aborted"}
         return {"type": "reconfig_refuse"}
@@ -376,5 +422,8 @@ class ReconfigParticipant:
             if st is not None and self.handle.stack.fingerprint() != fp:
                 applied = bool(self.handle.reconfigure(st))
             self.epoch = epoch
+        if TRACER.enabled:
+            TRACER.event("2pc.resync",
+                         attrs={"fp": fp, "epoch": epoch, "applied": applied})
         self._clear_prepared()
         return applied

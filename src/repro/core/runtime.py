@@ -26,8 +26,12 @@ from repro.core.negotiate import (
 )
 from repro.core.reconfigure import BarrierConn, ConnHandle, LockedConn, ReconfigParticipant
 from repro.core.stack import ConcreteStack, Stack
+from repro.obs.trace import TRACER
 
 BYTES = WireType.of("bytes")
+
+#: consecutive failed epoch queries before the flight-recorder strand alarm
+_STRAND_ALARM_FAILURES = 3
 
 
 class FabricTransport(Chunnel):
@@ -195,6 +199,14 @@ class HostAgent:
                 reply = chan.request({"type": "reconfig_query", "conn": conn_id})
             except TimeoutError:
                 part.defer_resync()
+                # Stranded-peer alarm: a prepared participant whose epoch
+                # queries keep timing out cannot learn the 2PC verdict.
+                # Dump the flight recorder once per conn (no-op when
+                # tracing is disabled) so the spans leading up to the
+                # strand survive for python -m repro.obs to render.
+                if part.resync_failures == _STRAND_ALARM_FAILURES and TRACER.enabled:
+                    from repro.obs.flight import strand_alarm
+                    strand_alarm(conn_id, src, part.resync_failures)
                 continue
             part.apply_state(reply if isinstance(reply, dict) else {})
 

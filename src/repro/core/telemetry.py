@@ -190,7 +190,9 @@ class ConnTelemetry:
         Keys (all part of the policy API): totals (``ops``, ``steps``,
         ``msgs_out``/``msgs_in``, ``bytes_out``/``bytes_in``, ``wire_bytes``),
         windowed rates (``ops_per_s``, ``bytes_per_s`` — measured since the
-        previous window reset), latency estimates (``op_mean_s``,
+        previous window reset — plus ``window_s``, the measured window
+        length, so ``ops_per_s * window_s`` reconstructs the exact op count
+        handed to this window), latency estimates (``op_mean_s``,
         ``op_p50_s``/``op_p95_s``, ``rtt_p50_s``/``rtt_p95_s``; None until
         fed), batch shape (``batch_hist`` — power-of-two msgs-per-send
         histogram, ``batch_p50``/``batch_p95``, ``msgs_per_op``), the step
@@ -205,18 +207,26 @@ class ConnTelemetry:
         """
         now = self._now()
         dt = max(now - self._win_t, 1e-9)
+        # Capture each shared counter EXACTLY ONCE. Recorders append
+        # concurrently (plain ints riding the GIL): re-reading self.ops
+        # for the window reset after the rate computation would hand any
+        # increment landing between the two reads to neither window —
+        # the rate of this snapshot excludes it, and the next window's
+        # baseline already includes it, so the sample is lost forever.
+        ops_now = self.ops
         total_bytes = self.bytes_out + self.wire_bytes
-        ops_per_s = (self.ops - self._win_ops) / dt
+        ops_per_s = (ops_now - self._win_ops) / dt
         bytes_per_s = (total_bytes - self._win_bytes) / dt
         if reset_window:
             self._win_t = now
-            self._win_ops = self.ops
+            self._win_ops = ops_now
             self._win_bytes = total_bytes
         rs = self._reconfig_stats
         pods = self.pod_step_times()
         return {
             "uptime_s": now - self.created_at,
-            "ops": self.ops,
+            "window_s": dt,
+            "ops": ops_now,
             "steps": self.steps,
             "msgs_out": self.msgs_out,
             "msgs_in": self.msgs_in,

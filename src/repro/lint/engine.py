@@ -48,6 +48,10 @@ RULES: Dict[str, str] = {
         "per-element delivery loop (.send/.put/.publish per message) inside "
         "a Datapath/Fabric/Endpoint hot-path method — batch it, or lift a "
         "scalar transform with the per_message adapter",
+    "span-in-hot-loop":
+        "span creation (.span/.begin_span) inside a loop of a Datapath/"
+        "Fabric/Endpoint hot-path method — spans are control-plane; the data "
+        "plane records one TRACER.record_batch per batch",
     # compat boundary + hygiene
     "compat-boundary":
         "version-gated JAX symbol used outside src/repro/compat/",

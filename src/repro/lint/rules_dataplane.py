@@ -1,4 +1,10 @@
-"""Data-plane rule: keep Datapath/Fabric hot paths batched.
+"""Data-plane rules: keep Datapath/Fabric hot paths batched.
+
+  span-in-hot-loop       span creation (``.span``/``.begin_span``) inside a
+                         loop of a hot-path method. Tracing the data plane is
+                         batch-granular by design (``TRACER.record_batch`` is
+                         one tuple append); a Span per message would blow the
+                         <10% enabled-tracing budget bench_overhead gates.
 
   per-message-hot-path   a loop (or comprehension) inside a hot-path method
                          of a Datapath/Fabric/Endpoint class performs a
@@ -87,4 +93,50 @@ def check_per_message_hot_path(mod: Module) -> List[Finding]:
                         f"(.{call.func.attr} inside a loop) — batch it: one "
                         "inner send / fabric send_batch per call, or lift a "
                         "scalar transform with repro.core.chunnel.per_message"))
+    return out
+
+
+#: tracer calls that allocate a Span — forbidden per message on the data
+#: plane; ``record_batch`` (one tuple per batch) and ``.event`` stay legal
+SPAN_CTORS = {"span", "begin_span", "start_span"}
+
+
+def _span_calls(loop: ast.AST) -> List[ast.Call]:
+    out = []
+    for sub in ast.walk(loop):
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr in SPAN_CTORS):
+            out.append(sub)
+    return out
+
+
+@analyzer
+def check_span_in_hot_loop(mod: Module) -> List[Finding]:
+    """Observability counterpart of ``per-message-hot-path``: span objects
+    (dict attrs, event lists, stack pushes) in a per-message loop would eat
+    the <10% enabled-tracing budget ``bench_overhead`` gates. Batch-level
+    spans (outside any loop) and ``record_batch``/``event`` are fine."""
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.ClassDef) and _is_hot_class(node)):
+            continue
+        for item in node.body:
+            if not (isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and item.name in HOT_METHODS):
+                continue
+            seen = set()
+            for sub in ast.walk(item):
+                if not isinstance(sub, _LOOPS):
+                    continue
+                for call in _span_calls(sub):
+                    if (call.lineno, call.col_offset) in seen:
+                        continue
+                    seen.add((call.lineno, call.col_offset))
+                    out.append(Finding(
+                        "span-in-hot-loop", mod.path, call.lineno,
+                        call.col_offset,
+                        f"{node.name}.{item.name} creates a span per loop "
+                        f"iteration (.{call.func.attr}) — record one "
+                        "TRACER.record_batch per batch instead; spans are "
+                        "reserved for control-plane phases"))
     return out

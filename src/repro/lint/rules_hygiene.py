@@ -26,7 +26,8 @@ from .findings import Finding
 
 #: path fragments the hygiene rules apply to (control-plane packages)
 HYGIENE_SCOPE = ("repro/core/", "repro/fleet/", "repro/comm/",
-                 "repro/serving/", "repro/lint/", "repro/chaos/")
+                 "repro/serving/", "repro/lint/", "repro/chaos/",
+                 "repro/obs/")
 
 MUTABLE_CTORS = {"list", "dict", "set"}
 

@@ -1,0 +1,27 @@
+"""Observability plane: causal tracing, unified metrics, flight recorder.
+
+Everything importable from this package root is stdlib-only, so core
+modules (`core/fabric.py`, `core/reconfigure.py`, ...) may import
+``TRACER`` without cycles. The scenario runner (``repro.obs.scenario``)
+and CLI (``python -m repro.obs``) import the core stack and are kept out
+of this root for the same reason. See docs/architecture.md §10.
+"""
+from repro.obs.export import (
+    PHASES,
+    phase_durations,
+    render_timeline,
+    stitched_trace_ids,
+    to_chrome,
+    write_chrome,
+)
+from repro.obs.flight import RECORDER, FlightRecorder, strand_alarm
+from repro.obs.metrics import MetricsRegistry, parse_prometheus
+from repro.obs.trace import NOOP_SPAN, Span, TRACER, Tracer
+
+__all__ = [
+    "TRACER", "Tracer", "Span", "NOOP_SPAN",
+    "MetricsRegistry", "parse_prometheus",
+    "FlightRecorder", "RECORDER", "strand_alarm",
+    "to_chrome", "write_chrome", "render_timeline", "phase_durations",
+    "stitched_trace_ids", "PHASES",
+]

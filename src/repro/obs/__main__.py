@@ -1,0 +1,152 @@
+"""``python -m repro.obs`` — render a reconfiguration run as a trace.
+
+Default mode runs the canonical KV-switch scenario (repro.obs.scenario)
+with tracing enabled, then:
+
+  * writes a Chrome ``trace_event`` JSON (``--trace PATH``) loadable in
+    Perfetto / chrome://tracing,
+  * writes the unified metrics snapshot in Prometheus text format
+    (``--metrics PATH``),
+  * prints the ASCII switch timeline with per-phase durations
+    (detect → score → negotiate → prepare → commit → swap → drain).
+
+``--check`` re-parses both artifacts and asserts the acceptance
+invariants: the Chrome doc is valid JSON with events, the metrics file
+parses as exposition text, and ONE stitched trace id covers the
+controller decision, the 2PC prepare/commit, and the swap on both
+endpoints. ``--render FILE`` skips the scenario and renders a previously
+written trace or flight-recorder dump instead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.obs.export import (
+    phase_durations,
+    render_timeline,
+    stitched_trace_ids,
+    to_chrome,
+    write_chrome,
+)
+from repro.obs.metrics import parse_prometheus
+
+#: span names the stitched acceptance trace must contain
+REQUIRED_SPANS = ("controller.tick", "2pc.prepare", "2pc.commit",
+                  "reconfig.swap")
+
+
+def _load_records(path: Path) -> list:
+    """Records from a flight-recorder dump ({"records": [...]}) or a raw
+    collect() list. Chrome trace JSON is not re-importable — point --render
+    at the flight-recorder dump instead."""
+    doc = json.loads(path.read_text())
+    if isinstance(doc, dict):
+        if "records" in doc:
+            return doc["records"]
+        if "traceEvents" in doc:
+            raise SystemExit(
+                f"{path} is a Chrome trace export; --render needs the "
+                f"flight-recorder dump (flightrec_*.json) or raw records")
+    if not isinstance(doc, list):
+        raise SystemExit(f"{path}: unrecognized trace document")
+    return doc
+
+
+def check_records(records: list) -> dict:
+    """Assert the stitched-trace acceptance invariants; return the summary.
+
+    One trace id must carry the whole switch story: the controller
+    decision, the 2PC prepare and commit, and a ``reconfig.swap`` on BOTH
+    endpoints (coordinator + peer ⇒ at least two swap spans)."""
+    traces = stitched_trace_ids(records)
+    if not traces:
+        raise AssertionError("no spans recorded")
+    main_trace = max(traces, key=traces.get)
+    names = [r["name"] for r in records
+             if r.get("kind") == "span" and r.get("trace_id") == main_trace]
+    missing = [n for n in REQUIRED_SPANS if n not in names]
+    if missing:
+        raise AssertionError(
+            f"trace {main_trace} is missing spans {missing}; has {sorted(set(names))}")
+    n_swaps = names.count("reconfig.swap")
+    if n_swaps < 2:
+        raise AssertionError(
+            f"expected the swap on both endpoints in one trace; "
+            f"got {n_swaps} reconfig.swap span(s)")
+    return {"trace_id": main_trace, "spans": len(names), "swaps": n_swaps,
+            "all_traces": traces}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Render a traced reconfiguration run "
+                    "(Chrome trace + metrics + ASCII switch timeline).")
+    ap.add_argument("--trace", type=Path, default=None,
+                    help="write Chrome trace_event JSON here")
+    ap.add_argument("--metrics", type=Path, default=None,
+                    help="write the Prometheus metrics snapshot here")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the stitched-trace + parseability invariants")
+    ap.add_argument("--render", type=Path, default=None,
+                    help="render an existing flight-recorder dump instead of "
+                         "running the scenario")
+    ap.add_argument("--width", type=int, default=48,
+                    help="timeline bar width (default 48)")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    if args.render is not None:
+        records = _load_records(args.render)
+        registry = None
+    else:
+        from repro.obs.scenario import run_kv_switch_scenario
+
+        res = run_kv_switch_scenario(seed=args.seed)
+        records = res["records"]
+        registry = res["registry"]
+        if not res["committed"]:
+            print("WARNING: the scenario's multilateral switch did not commit",
+                  file=sys.stderr)
+        print(f"kv-switch scenario: committed={res['committed']} "
+              f"active={res['client_fp']}")
+
+    if args.trace is not None:
+        args.trace.parent.mkdir(parents=True, exist_ok=True)
+        doc = write_chrome(records, args.trace)
+        print(f"wrote {args.trace} ({len(doc['traceEvents'])} events)")
+    if args.metrics is not None:
+        if registry is None:
+            print("--metrics needs the scenario run (not --render)",
+                  file=sys.stderr)
+            return 2
+        args.metrics.parent.mkdir(parents=True, exist_ok=True)
+        registry.write_prometheus(args.metrics)
+        print(f"wrote {args.metrics}")
+
+    print()
+    print(render_timeline(records, width=args.width))
+    print()
+    for phase, p in phase_durations(records).items():
+        print(f"  {phase:<9} extent={p['extent_s'] * 1e3:8.2f}ms "
+              f"busy={p['busy_s'] * 1e3:8.2f}ms spans={p['count']}")
+
+    if args.check:
+        summary = check_records(records)
+        if args.trace is not None:
+            doc = json.loads(args.trace.read_text())
+            assert doc.get("traceEvents"), "Chrome trace has no events"
+        if args.metrics is not None:
+            samples = parse_prometheus(args.metrics.read_text())
+            assert samples, "metrics snapshot parsed to zero samples"
+            print(f"check: metrics OK ({len(samples)} samples)")
+        print(f"check: stitched trace OK (trace_id={summary['trace_id']}, "
+              f"{summary['spans']} spans, {summary['swaps']} swaps)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -657,3 +657,66 @@ class TestPerMessageHotPath:
                "            # lint: allow[per-message-hot-path] fixture justification\n"
                "            self.inner.send([m])\n")
         assert lint_sources({CORE: src}) == []
+
+
+class TestSpanInHotLoop:
+    BAD_SPAN_LOOP = (
+        "class ShimDP:\n"
+        "    def send(self, msgs):\n"
+        "        for m in msgs:\n"
+        "            with TRACER.span('msg'):\n"
+        "                pass\n"
+        "        self.inner.send(msgs)\n"
+    )
+    BAD_BEGIN_SPAN_WHILE = (
+        "class Fabric:\n"
+        "    def recv_many(self, buf, timeout=None):\n"
+        "        while True:\n"
+        "            sp = TRACER.begin_span('frame')\n"
+        "            sp.end()\n"
+    )
+    GOOD_BATCH_SPAN = (
+        "class ShimDP:\n"
+        "    def send(self, msgs):\n"
+        "        with TRACER.span('batch'):\n"
+        "            self.inner.send(msgs)\n"
+    )
+    GOOD_RECORD_BATCH = (
+        "class ShimDP:\n"
+        "    def send(self, msgs):\n"
+        "        for dst, batch in msgs.items():\n"
+        "            TRACER.record_batch('chunnel.send', len(batch), len(batch))\n"
+        "            self.ep.send_batch(dst, batch)\n"
+    )
+
+    def test_span_per_message_flagged(self):
+        assert rules_of(lint_sources({CORE: self.BAD_SPAN_LOOP})) == {
+            "span-in-hot-loop"}
+
+    def test_begin_span_in_while_flagged(self):
+        assert rules_of(lint_sources({CORE: self.BAD_BEGIN_SPAN_WHILE})) == {
+            "span-in-hot-loop"}
+
+    def test_batch_level_span_ok(self):
+        assert lint_sources({CORE: self.GOOD_BATCH_SPAN}) == []
+
+    def test_record_batch_in_loop_ok(self):
+        # record_batch is the sanctioned per-batch instrument — legal even
+        # inside a per-destination grouping loop
+        assert lint_sources({CORE: self.GOOD_RECORD_BATCH}) == []
+
+    def test_cold_class_span_loop_ok(self):
+        src = ("class Planner:\n"
+               "    def send(self, msgs):\n"
+               "        for m in msgs:\n"
+               "            with TRACER.span('plan'):\n"
+               "                pass\n")
+        assert lint_sources({CORE: src}) == []
+
+    def test_pragma_suppresses(self):
+        src = ("class ShimDP:\n"
+               "    def send(self, msgs):\n"
+               "        for m in msgs:\n"
+               "            # lint: allow[span-in-hot-loop] fixture justification\n"
+               "            sp = TRACER.span('m')\n")
+        assert lint_sources({CORE: src}) == []
