@@ -60,8 +60,10 @@ class _LegacyFabric:
         self._eps: Dict[str, _LegacyEndpoint] = {}
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
-        self.sent_bytes = 0
-        self.sent_msgs = 0
+        # internal tally emulating the legacy fabric's per-send accounting
+        # cost (NOT the deprecated Fabric.sent_msgs/sent_bytes aliases)
+        self.byte_count = 0
+        self.msg_count = 0
 
     def register(self, addr: str) -> _LegacyEndpoint:
         ep = _LegacyEndpoint(addr, self)
@@ -73,8 +75,8 @@ class _LegacyFabric:
         with self._lock:
             self._rng.random()  # loss draw (loss=0 here, but the draw is paid)
             ep = self._eps.get(dst)
-            self.sent_msgs += 1
-            self.sent_bytes += size
+            self.msg_count += 1
+            self.byte_count += size
         if ep is not None:
             ep.inbox.put((src, msg))
 

@@ -1,0 +1,386 @@
+"""Fleet SLO plane end-to-end: federation → burn-rate breach → earlier switch.
+
+Two scenarios assert the PR's tentpole loop (docs/architecture.md §11):
+
+``run_slo_guard_scenario`` — one edge region talks to a ``WanGateway`` hub
+through the negotiated Select [FastWire | WanLink] while a ``ChaosPlan``
+degrades its links (latency + jitter + loss). The region's metrics registry
+is published over the KV obs plane (``MetricsPublisher``), federated
+(``MetricsFederator``), and judged by an ``SLOEngine`` whose latency SLO
+reads the *federated per-region* p95 — intent-level: the objective's
+threshold sits far below any "on fire" hard threshold. The ``slo_guard``
+policy arms on the budget's burn rate and flips the region to the
+compressed+reliable WAN stack; a shadow raw-threshold controller runs on the
+SAME telemetry in the same run, and the scenario asserts the guard fired
+STRICTLY EARLIER. Both rules watch one monotonically-adapting EwmaQuantile
+p95 estimate, so the ordering is structural (the estimate crosses the low
+SLO bound before the high raw bound), not a race. The breach also trips the
+flight recorder (``flightrec_slo_breach_*.json``).
+
+``run_trace_calibration`` — two annotated chunnels whose ANNOTATIONS invert
+their MEASURED costs: the trace records say which is actually slower, and
+``calibrate_from_traces`` flips the scored-negotiation ranking. Asserts the
+measured ``op_latency_s`` lands within 2x of an independent direct timing of
+the same transform (acceptance criterion).
+
+Artifact: benchmarks/out/slo_scenario.json (CI uploads it).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import statistics
+import time
+
+from repro.core import (
+    Fabric,
+    FabricTransport,
+    FnChunnel,
+    KVStore,
+    LinkModel,
+    LockedConn,
+    ReconfigController,
+    Rule,
+    Select,
+    above,
+    conn_controller,
+    make_stack,
+)
+from repro.core.cost import (
+    LATENCY_FIRST,
+    Candidate,
+    CostModel,
+    chunnel_cost,
+    rank,
+)
+from repro.obs.calibrate import calibrate_from_traces
+from repro.obs.federate import MetricsFederator, MetricsPublisher
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLO, SLOEngine
+
+SLO_OUT = pathlib.Path(__file__).resolve().parent / "out" / "slo_scenario.json"
+
+#: the SLO's latency bound (intent: "requests feel fast") vs the raw
+#: emergency threshold a hand-written rule would use — the gap between them
+#: is exactly the earlier-detection margin the burn-rate policy buys. The
+#: clean-path echo RTT is ~1.5-2 ms (gateway poll at 1 ms), the degraded
+#: path climbs through 4-15+ ms, so the p95 estimate crosses the SLO bound
+#: ticks before the emergency bound.
+SLO_P95_S = 0.0035
+HARD_P95_S = 0.012
+
+
+def run_slo_guard_scenario(*, fast: bool = False) -> dict:
+    from repro.chaos import ChaosInjector, ChaosPlan
+    from repro.comm.chunnels import WanLinkChunnel
+    from repro.obs.flight import RECORDER
+    from repro.serving.gateway import WanGateway
+
+    fabric = Fabric(default_link=LinkModel(latency_s=0.0002), seed=13)
+    # 1 ms serve poll keeps the CLEAN echo RTT well under the SLO bound —
+    # the healthy phase must not burn budget
+    gw = WanGateway(fabric, "hub", poll_s=0.001)
+    store = KVStore()
+
+    ep_fast = fabric.register("edge/fastlink")
+    ep_wan = fabric.register("edge/wanlink")
+    stack = make_stack(Select(
+        FabricTransport(ep_fast, "hub/fast", label="FastWire"),
+        WanLinkChunnel(ep_wan, "hub/wan", mtu_bytes=2048, window=8,
+                       timeout_s=0.03, retries=8),
+    ))
+    handle = LockedConn(stack.preferred())  # FastWire
+
+    # -- observability plane: registry -> KV publish -> federation ----------
+    registry = MetricsRegistry()
+    # non-destructive sampling: the controller owns the telemetry's rate
+    # window; publishing must peek, not reset (see MetricsPublisher docs)
+    registry.register("conn",
+                      lambda: handle.telemetry.snapshot(reset_window=False),
+                      instance="edge-conn")
+    pub = MetricsPublisher(store, "slo-fleet", "edge-1", registry,
+                           region="edge")
+    # a second, healthy member in another region: the federation must keep
+    # regions apart — core's clean p95 must not dilute edge's breach
+    core_reg = MetricsRegistry()
+    core_reg.register("conn", lambda: {"ops_per_s": 40.0,
+                                       "rtt_p95_s": 0.0004,
+                                       "rtt_p50_s": 0.0002}, "core-conn")
+    core_pub = MetricsPublisher(store, "slo-fleet", "core-1", core_reg,
+                                region="core")
+    fed = MetricsFederator(store, "slo-fleet", ttl_s=5.0)
+
+    # -- SLO engine: windows sized to the scenario's wall clock -------------
+    engine = SLOEngine(
+        [SLO("region_latency", "obs.region.edge.conn.rtt_p95_s",
+             objective=0.95, threshold=SLO_P95_S)],
+        fast_window_s=0.15, slow_window_s=0.6, budget_window_s=60.0,
+        recorder=RECORDER)
+
+    ctl = conn_controller(
+        handle, stack, policy="slo_guard",
+        policy_params={"slo": "region_latency",
+                       "safe_names": ("WanLink",), "hold": 1},
+        cooldown_s=0.0)
+
+    # shadow raw-threshold controller over the SAME telemetry snapshots: the
+    # baseline the guard must beat (recording switch fn; never moves data).
+    # hold=2 is the repo's standard hysteresis for single-metric threshold
+    # rules (latency_slo / wan_region_adaptive defaults) — a raw threshold
+    # NEEDS it against one noisy sample; the guard's burn windows already
+    # smooth, which is why slo_guard defaults hold=1
+    raw_fired: list = []
+    raw_ctl = ReconfigController(
+        rules=[Rule("raw-threshold", above("rtt_p95_s", HARD_P95_S),
+                    "WanLink", hold=2)],
+        switch=lambda t: raw_fired.append(t),
+        current=lambda: "FastWire", cooldown_s=0.0)
+
+    weather = LinkModel(latency_s=0.004, jitter_s=0.002, loss=0.2)
+    plan = ChaosPlan(seed=13)
+    plan.degrade("edge", "hub", weather, at=0.0, label="edge-weather")
+    inj = ChaosInjector(fabric, plan).start()
+
+    def on_wan() -> bool:
+        return any(c.name == "WanLink" for c in handle.stack.chunnels)
+
+    rid = [0]
+
+    def probe(timeout: float = 0.04) -> None:
+        rid[0] += 1
+        t0 = time.monotonic()
+        if on_wan():
+            try:
+                handle.send([{"rid": rid[0]}])
+                handle.telemetry.record_rtt(time.monotonic() - t0)
+            except TimeoutError:
+                handle.telemetry.record_rtt(timeout)
+            return
+        handle.send([{"rid": rid[0]}])
+        buf = [None]
+        deadline = t0 + timeout
+        while True:
+            t = deadline - time.monotonic()
+            if t <= 0 or not handle.recv(buf, timeout=max(t, 0.0)):
+                handle.telemetry.record_rtt(timeout)  # timeouts drag p95 up
+                return
+            m = buf[0]
+            if isinstance(m, dict) and m.get("rid") == rid[0]:
+                handle.telemetry.record_rtt(time.monotonic() - t0)
+                return
+
+    max_ticks = 30 if fast else 45
+    probes_per_tick = 4
+    guard_tick = raw_tick = None
+    clean_ticks = 3      # pre-weather baseline so the budget starts intact
+    timeline = []
+    budget_series = []
+    try:
+        for tick in range(max_ticks):
+            if tick >= clean_ticks:
+                inj.poll()  # weather applies after the clean phase
+            for _ in range(probes_per_tick):
+                probe()
+                time.sleep(0.002)
+            pub.publish()
+            core_pub.publish()
+            view = fed.view()
+            sigs = engine.observe(view)
+            snap = handle.telemetry.snapshot()   # the ONE reset consumer
+            snap.update(sigs)
+            d = ctl.tick(snap)
+            rd = raw_ctl.tick(dict(snap))
+            if guard_tick is None and d.reason == "switched":
+                guard_tick = tick
+            if raw_tick is None and rd.fired:
+                raw_tick = tick
+            timeline.append({
+                "tick": tick,
+                "p95_ms": round((snap.get("rtt_p95_s") or 0.0) * 1e3, 3),
+                "burn_fast": round(sigs["slo.region_latency.burn_fast"], 2),
+                "burn_slow": round(sigs["slo.region_latency.burn_slow"], 2),
+                "alarm": sigs["slo.region_latency.alarm"],
+                "guard": d.reason, "raw_fired": bool(rd.fired),
+            })
+            budget_series.append(
+                sigs["slo.region_latency.budget_remaining"])
+            if (guard_tick is not None and raw_tick is not None
+                    and tick >= raw_tick + 2):
+                break
+    finally:
+        inj.stop()
+        gw_stats = gw.stats()
+        gw.close()
+        pub.retire()
+        core_pub.retire()
+
+    final_view = view
+    return {
+        "scenario": "slo-guard-vs-raw-threshold",
+        "slo_threshold_s": SLO_P95_S, "hard_threshold_s": HARD_P95_S,
+        "guard": {
+            "switch_tick": guard_tick,
+            "switches": [d.to_json() for d in ctl.switch_log()],
+            "chunnels": [c.name for c in handle.stack.chunnels],
+            "capabilities": sorted(str(c) for ch in handle.stack.chunnels
+                                   for c in ch.capabilities()),
+            "counts": ctl.counts(),
+        },
+        "raw": {"fired_tick": raw_tick, "counts": raw_ctl.counts()},
+        "slo": {"events": engine.events, "report": engine.report(),
+                "budget_remaining_series": budget_series},
+        "federation": {
+            "members": final_view.get("obs.members"),
+            "edge_p95_s": final_view.get(
+                "obs.region.edge.conn.rtt_p95_s"),
+            "core_p95_s": final_view.get(
+                "obs.region.core.conn.rtt_p95_s"),
+            "publish_conflicts": pub.conflicts + core_pub.conflicts,
+        },
+        "flightrec": os.path.join(
+            RECORDER.out_dir, "flightrec_slo_breach_region_latency.json"),
+        "timeline": timeline,
+        "gateway": gw_stats,
+        "weather": {"latency_s": weather.latency_s,
+                    "jitter_s": weather.jitter_s, "loss": weather.loss},
+    }
+
+
+def run_trace_calibration() -> dict:
+    """Annotations lie; traces measure; the ranking flips (acceptance)."""
+    from repro.comm.chunnels import reset_cost_calibration
+    from repro.obs.trace import TRACER
+
+    # annotations INVERTED vs the real transforms: "Quick" claims 0.1ms but
+    # sleeps ~2ms per batch; "Steady" claims 5ms but sleeps ~0.3ms
+    def slow_xf(msgs):
+        time.sleep(0.002)
+        return msgs
+
+    def quick_xf(msgs):
+        time.sleep(0.0003)
+        return msgs
+
+    quick = FnChunnel("Quick", on_send_batch=slow_xf,
+                      cost=CostModel(op_latency_s=1e-4))
+    steady = FnChunnel("Steady", on_send_batch=quick_xf,
+                       cost=CostModel(op_latency_s=5e-3))
+
+    def candidates():
+        return [Candidate("quick-stack", chunnel_cost(quick), "Quick"),
+                Candidate("steady-stack", chunnel_cost(steady), "Steady")]
+
+    def order():
+        return [c.label for _u, c in rank(candidates(), LATENCY_FIRST)]
+
+    reset_cost_calibration()
+    nominal = order()
+
+    # independent direct timing of the same transforms (median of N) — what
+    # the trace-derived estimate must land within 2x of
+    def direct(fn, n=7):
+        durs = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn([b"x" * 128] * 8)
+            durs.append(time.perf_counter() - t0)
+        return statistics.median(durs)
+
+    bench = {"Quick": direct(slow_xf), "Steady": direct(quick_xf)}
+
+    was = TRACER.enabled
+    TRACER.enable()
+    try:
+        for ch in (quick, steady):
+            dp = ch.connect_wrap(None)
+            for _ in range(9):
+                dp.send([b"x" * 128] * 8)
+        records = TRACER.collect(clear=True)
+    finally:
+        if not was:
+            TRACER.disable()
+
+    cal = calibrate_from_traces(records, min_samples=3, apply=True)
+    measured = order()
+
+    out = {
+        "nominal_order": nominal, "measured_order": measured,
+        "rank_changed": nominal != measured,
+        "calibration": {n: f for n, f in cal.chunnels.items()},
+        "samples": cal.samples,
+        "bench_direct_s": bench,
+        "within_2x": {
+            n: (cal.chunnels[n]["op_latency_s"] / bench[n]
+                if bench.get(n) else None)
+            for n in cal.chunnels if n in bench},
+    }
+    reset_cost_calibration()   # never leak measured costs into other benches
+    return out
+
+
+def _assert_slo_acceptance(res: dict) -> None:
+    gs = res["guard_scenario"]
+    g = gs["guard"]
+    # the guard fired, on the burn rule, and landed on compressed+reliable
+    assert g["switch_tick"] is not None, g
+    assert g["switches"], g
+    assert g["switches"][0]["rule"] == "slo_guard:region_latency:burn", g
+    assert "WanLink" in g["chunnels"], g
+    assert any("wan-gbn" in c for c in g["capabilities"]), g
+    assert any("q8b" in c for c in g["capabilities"]), g
+    # the raw-threshold baseline fired too — but strictly LATER
+    raw_tick = gs["raw"]["fired_tick"]
+    assert raw_tick is not None, gs["raw"]
+    assert g["switch_tick"] < raw_tick, (g["switch_tick"], raw_tick)
+    # breach is a first-class event; the budget visibly burned down
+    kinds = [e["kind"] for e in gs["slo"]["events"]]
+    assert "breach" in kinds, gs["slo"]["events"]
+    series = gs["slo"]["budget_remaining_series"]
+    assert series and series[-1] < 1.0, series[-5:]
+    # the breach tripped the flight recorder
+    assert os.path.exists(gs["flightrec"]), gs["flightrec"]
+    # federation really carried two members and kept regions apart
+    f = gs["federation"]
+    assert f["members"] == 2, f
+    assert f["edge_p95_s"] > f["core_p95_s"], f
+
+    c = res["calibration"]
+    assert c["rank_changed"], c
+    assert c["nominal_order"] == ["Quick", "Steady"], c
+    assert c["measured_order"] == ["Steady", "Quick"], c
+    for name, ratio in c["within_2x"].items():
+        assert ratio is not None and 0.5 <= ratio <= 2.0, (name, ratio, c)
+
+
+def emit_slo_scenario(*, fast: bool = False) -> dict:
+    """Run both scenario halves, write the JSON artifact, assert the
+    acceptance shape. Shared by main() and run.py --smoke."""
+    from repro.obs.flight import RECORDER
+    from repro.obs.trace import TRACER
+
+    was_enabled = TRACER.enabled
+    TRACER.enable()   # SLO breaches must reach the flight recorder
+    try:
+        with RECORDER.capture("slo_smoke"):
+            res = {"guard_scenario": run_slo_guard_scenario(fast=fast),
+                   "calibration": run_trace_calibration()}
+            SLO_OUT.parent.mkdir(parents=True, exist_ok=True)
+            SLO_OUT.write_text(json.dumps(res, indent=2, default=float))
+            _assert_slo_acceptance(res)
+    finally:
+        if not was_enabled:
+            TRACER.disable()
+    return res
+
+
+def main() -> None:
+    res = emit_slo_scenario()
+    g = res["guard_scenario"]["guard"]
+    print(f"slo_guard switch tick {g['switch_tick']} vs raw "
+          f"{res['guard_scenario']['raw']['fired_tick']}; "
+          f"artifact: {SLO_OUT}")
+
+
+if __name__ == "__main__":
+    main()

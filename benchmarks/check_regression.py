@@ -1,0 +1,112 @@
+"""Performance-regression gate: this run's artifacts vs the committed baseline.
+
+``benchmarks/baseline.json`` records derated reference values for the two
+numbers the PR acceptance gates track:
+
+  * data-plane throughput at batch=64 (``benchmarks/out/dataplane.json``,
+    written by ``bench_dataplane.run``) — higher is better; fail when the
+    measured value falls more than ``TOLERANCE`` (30%) below baseline;
+  * tracing overhead when ENABLED at batch=64
+    (``benchmarks/out/overhead.json``, written by ``run_tracing_overhead``)
+    — lower is better. Overhead fractions are tiny and jittery, so the
+    allowance is ``max(baseline * (1 + TOLERANCE), baseline + abs_slack)``:
+    the absolute slack keeps a 0.01-vs-0.013 wobble from failing CI while
+    the relative bound still catches a real hot-path regression.
+
+Run after the benches have written their artifacts (``run.py --smoke`` does
+both, in order). Writes ``benchmarks/out/regression_report.json`` — the CI
+comparison artifact — and exits 1 on any regression. Missing artifacts are
+regressions too: a bench that silently stopped emitting its artifact must
+not look like a pass.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import Optional
+
+HERE = pathlib.Path(__file__).resolve().parent
+BASELINE = HERE / "baseline.json"
+OUT_DIR = HERE / "out"
+REPORT = OUT_DIR / "regression_report.json"
+
+#: relative regression allowed before CI fails (ISSUE acceptance: >30% fails)
+TOLERANCE = 0.30
+
+
+def _load(path: pathlib.Path) -> Optional[dict]:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+
+
+def check(baseline_path: pathlib.Path = BASELINE,
+          out_dir: pathlib.Path = OUT_DIR) -> dict:
+    """Compare artifacts to the baseline; return the report dict.
+
+    Report shape: ``{"checks": [...], "regressions": [...]}`` where each
+    check row carries name, measured, baseline, allowed bound, direction,
+    and ok. The report is also written to ``out/regression_report.json``.
+    """
+    base = json.loads(baseline_path.read_text())
+    checks = []
+
+    def add(name: str, measured: Optional[float], baseline: float,
+            allowed: float, direction: str) -> None:
+        if measured is None:
+            ok = False
+        elif direction == "min":     # higher is better; allowed is the floor
+            ok = measured >= allowed
+        else:                        # lower is better; allowed is the ceiling
+            ok = measured <= allowed
+        checks.append({"name": name, "measured": measured,
+                       "baseline": baseline, "allowed": allowed,
+                       "direction": direction, "ok": ok})
+
+    dp = _load(out_dir / "dataplane.json")
+    b = base["dataplane"]
+    add("dataplane.batch64_msgs_per_s",
+        (dp or {}).get("default", {}).get("64", {}).get("msgs_per_s"),
+        b["batch64_msgs_per_s"],
+        b["batch64_msgs_per_s"] * (1.0 - TOLERANCE), "min")
+    add("dataplane.speedup_batch64", (dp or {}).get("speedup_batch64"),
+        b["speedup_batch64"], b["speedup_batch64"] * (1.0 - TOLERANCE), "min")
+
+    ov = _load(out_dir / "overhead.json")
+    b = base["overhead"]
+    add("overhead.enabled_overhead", (ov or {}).get("enabled_overhead"),
+        b["enabled_overhead"],
+        max(b["enabled_overhead"] * (1.0 + TOLERANCE),
+            b["enabled_overhead"] + b["abs_slack"]), "max")
+
+    report = {"baseline": str(baseline_path), "tolerance": TOLERANCE,
+              "checks": checks,
+              "regressions": [c for c in checks if not c["ok"]]}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    REPORT.write_text(json.dumps(report, indent=2))
+    return report
+
+
+def main() -> int:
+    report = check()
+    for c in report["checks"]:
+        mark = "ok  " if c["ok"] else "FAIL"
+        meas = "missing" if c["measured"] is None else f"{c['measured']:.4g}"
+        bound = "floor" if c["direction"] == "min" else "ceiling"
+        print(f"  {mark} {c['name']:<32} measured={meas:<10} "
+              f"{bound}={c['allowed']:.4g} (baseline {c['baseline']:.4g})")
+    print(f"report: {REPORT}")
+    if report["regressions"]:
+        names = [c["name"] for c in report["regressions"]]
+        print(f"REGRESSION: {', '.join(names)} "
+              f"(>{TOLERANCE:.0%} worse than baseline.json — if this is an "
+              f"intended trade-off, refresh the baseline in the same PR)",
+            file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

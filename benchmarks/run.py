@@ -22,6 +22,7 @@ import traceback
 MODULES = [
     "benchmarks.bench_dataplane",
     "benchmarks.bench_overhead",
+    "benchmarks.bench_slo",
     "benchmarks.bench_reconfigure",
     "benchmarks.bench_kv_latency",
     "benchmarks.bench_sharding",
@@ -108,6 +109,26 @@ def smoke() -> None:
     print("smoke_tracing_overhead,0.00,"
           f"enabled_overhead={tr['enabled_overhead']:.3f};"
           f"disabled_guard_frac={tr['disabled_guard_frac']:.5f}")
+
+    # SLO plane: federated metrics drive an error-budget burn-rate alarm
+    # that arms the switch BEFORE the raw p95 threshold would (asserts the
+    # acceptance shape internally and writes benchmarks/out/slo_scenario.json
+    # — a CI artifact)
+    from benchmarks.bench_slo import emit_slo_scenario
+
+    slo = emit_slo_scenario(fast=True)
+    _g = slo["guard_scenario"]["guard"]
+    print("smoke_slo_guard,0.00,"
+          f"guard_tick={_g['switch_tick']};"
+          f"raw_tick={slo['guard_scenario']['raw']['fired_tick']};"
+          f"rank_changed={slo['calibration']['rank_changed']}")
+
+    # regression gate: committed baseline vs this run's artifacts
+    from benchmarks.check_regression import check as check_regression
+
+    reg = check_regression()
+    print("smoke_regression_gate,0.00,"
+          f"checked={len(reg['checks'])};regressions={len(reg['regressions'])}")
 
     print("# smoke ok on jax compat paths:", file=sys.stderr)
     for line in compat.report().splitlines():

@@ -15,7 +15,12 @@
 #                               benchmarks/out/chaos_scenarios.json) run
 #                               headless so the close-the-loop and failure
 #                               paths are tier-1
-#   5. observability smoke     — repro.obs CLI: KV-switch scenario traced end
+#   5. perf regression gate   — benchmarks/check_regression.py compares this
+#                               run's artifacts (dataplane.json, overhead.json)
+#                               against the committed benchmarks/baseline.json
+#                               and fails on >30% regression, writing
+#                               benchmarks/out/regression_report.json
+#   6. observability smoke     — repro.obs CLI: KV-switch scenario traced end
 #                               to end; asserts the Chrome trace stitches one
 #                               causal trace across both endpoints and the
 #                               Prometheus export parses
@@ -39,6 +44,12 @@ echo "== data-plane throughput smoke =="
 # scaled-down batched-vs-per-message sweep; asserts the >=10x batch=64
 # speedup and writes benchmarks/out/dataplane.json (a CI artifact)
 python -m benchmarks.bench_dataplane --smoke
+
+echo "== perf regression gate (vs benchmarks/baseline.json) =="
+# re-run after the full-size dataplane smoke so the gate judges the freshest
+# artifacts; fails (exit 1) on >30% regression and writes
+# benchmarks/out/regression_report.json for inspection
+python -m benchmarks.check_regression
 
 echo "== observability smoke (stitched trace + metrics export) =="
 # runs the KV-switch scenario end to end, writes a Chrome trace_event JSON

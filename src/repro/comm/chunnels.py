@@ -36,7 +36,8 @@ from repro.core.controller import (
     below,
     register_policy,
 )
-from repro.core.cost import CostModel
+from repro.core.cost import (CostModel, install_measured_costs,
+                             reset_measured_costs)
 
 GRADS_F32 = WireType.of("grads", dtype="f32")
 UNIT = WireType.of("unit")
@@ -74,7 +75,7 @@ _CALIBRATION = CostCalibration()
 
 def calibrate_cost_models(*, mesh=None, fast_axis: str = "data",
                           link_bytes_per_s: Optional[float] = None,
-                          signal=None) -> CostCalibration:
+                          signal=None, measured=None) -> CostCalibration:
     """Derive the transport cost models' terms from the live mesh shape and a
     measured link bandwidth, instead of the static ``NOMINAL_FAST``
     annotation. Process-wide (the mesh is process-wide too): the trainer
@@ -83,7 +84,14 @@ def calibrate_cost_models(*, mesh=None, fast_axis: str = "data",
     yields ``ext.link_bytes_per_s`` (``LinkBandwidthSignal``); an explicit
     ``link_bytes_per_s`` wins over it. Fields not derivable from THIS call's
     arguments keep their current calibration (so the trainer installing its
-    mesh width does not wipe a previously measured bandwidth)."""
+    mesh width does not wipe a previously measured bandwidth).
+
+    ``measured`` installs trace-derived per-chunnel cost overrides — either
+    a ``repro.obs.calibrate.TraceCalibration`` or a plain
+    ``{chunnel_name: {cost field: value}}`` dict — into the core scorer's
+    measured tables (``repro.core.cost.install_measured_costs``); the full
+    loop is ``calibrate_from_traces(records)``, which calls this.
+    """
     global _CALIBRATION
     n_fast = _CALIBRATION.n_fast
     if mesh is not None and fast_axis in getattr(mesh, "axis_names", ()):
@@ -93,6 +101,10 @@ def calibrate_cost_models(*, mesh=None, fast_axis: str = "data",
         bw = (signal.read() or {}).get("ext.link_bytes_per_s")
     if bw is None:
         bw = _CALIBRATION.dcn_bytes_per_s
+    if measured is not None:
+        chunnels = getattr(measured, "chunnels", measured)
+        blips = getattr(measured, "stack_blips", None) or {}
+        install_measured_costs(chunnels=chunnels, stack_blips=blips)
     _CALIBRATION = CostCalibration(n_fast=n_fast, dcn_bytes_per_s=bw)
     return _CALIBRATION
 
@@ -102,8 +114,11 @@ def cost_calibration() -> CostCalibration:
 
 
 def reset_cost_calibration() -> None:
+    """Restore static annotations: the mesh/bandwidth calibration AND any
+    trace-derived measured cost overrides."""
     global _CALIBRATION
     _CALIBRATION = CostCalibration()
+    reset_measured_costs()
 
 
 def calibrated_objective(base):
@@ -580,7 +595,8 @@ class _WanLinkDP(Datapath):
         # spans here); chunk headers inherit its ctx inside chunk_payload,
         # and the rc.window span underneath tags each retransmit retry=n.
         sp = (TRACER.span("wan.send", attrs={"peer": self.ch.peer,
-                                             "n": len(msgs)})
+                                             "n": len(msgs),
+                                             "chunnel": self.ch.name})
               if TRACER.enabled else NOOP_SPAN)
         with sp:
             frames: list = []

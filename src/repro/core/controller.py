@@ -41,7 +41,9 @@ editing core:
 
 Built-ins: ``latency_slo`` (SLO breach ⇒ lowest-latency option),
 ``byte_budget`` (byte-rate cap ⇒ fewest-wire-bytes option), ``cost_aware``
-(track the utility argmax continuously). The trainer registers
+(track the utility argmax continuously), ``slo_guard`` (error-budget
+burn-rate signals from ``repro.obs.slo`` ⇒ a safe stack before raw
+thresholds trip). The trainer registers
 ``trainer_default`` and the KV serving plane ``kv_load_adaptive`` the same
 way — through the public decorator, not by editing this module.
 """
@@ -429,6 +431,48 @@ def byte_budget_policy(ctx: PolicyContext) -> List[Rule]:
                           below(metric, ctx.param("recover_frac", 0.7) * budget),
                           ctx.default,
                           hold=ctx.param("recover_hold", 2 * hold), priority=0))
+    return rules
+
+
+@register_policy("slo_guard")
+def slo_guard_policy(ctx: PolicyContext) -> List[Rule]:
+    """Error-budget burn (``repro.obs.slo``) ⇒ a safe stack, *before* any
+    raw-threshold rule would fire.
+
+    Reads the ``slo.<name>.*`` signals an ``SLOEngine`` exports (merge them
+    into the controller's snapshot, or ``add_source`` the engine on a fleet
+    aggregator): the breach clause arms when BOTH burn windows exceed their
+    thresholds — exactly the engine's alarm condition, but evaluated inside
+    the controller so hold/priority/cooldown damping applies uniformly.
+    Burn-rate arming is the point: a budget burns the moment the metric
+    crosses the *objective's* threshold, which sits well below any "the
+    service is on fire" hard threshold, so the guard moves first.
+
+    params: slo (required — the SLO's name), fast_burn/slow_burn (default
+    14.4/6.0, match the engine's), safe_names (chunnel/candidate names to
+    flip to; default: ScoredTarget over all candidates under ``objective``,
+    default LATENCY_FIRST), hold (default 1 — the engine's windows already
+    smooth), priority (default 3), recover_hold. With a ``ctx.default`` a
+    recovery clause drops back once the engine clears the alarm.
+    """
+    name = ctx.params["slo"]
+    fast_burn = ctx.param("fast_burn", 14.4)
+    slow_burn = ctx.param("slow_burn", 6.0)
+    safe_names = ctx.param("safe_names")
+    if safe_names:
+        target: Any = ctx.candidate_named(*safe_names).target
+    else:
+        target = ScoredTarget(ctx.candidates,
+                              ctx.param("objective", LATENCY_FIRST))
+    rules = [Rule(f"slo_guard:{name}:burn",
+                  all_of(above(f"slo.{name}.burn_fast", fast_burn),
+                         above(f"slo.{name}.burn_slow", slow_burn)),
+                  target, hold=ctx.param("hold", 1),
+                  priority=ctx.param("priority", 3))]
+    if ctx.default is not None:
+        rules.append(Rule(f"slo_guard:{name}:recovered",
+                          below(f"slo.{name}.alarm", 0.5), ctx.default,
+                          hold=ctx.param("recover_hold", 2), priority=0))
     return rules
 
 

@@ -28,8 +28,8 @@ historical first-compatible selection.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.obs.trace import NOOP_SPAN, TRACER
 
@@ -63,19 +63,69 @@ class CostModel:
 
 NEUTRAL = CostModel()
 
+# -- measured overrides (trace-derived calibration) ---------------------------
+# ``repro.obs.calibrate`` installs MEASURED per-chunnel cost fields (keyed by
+# chunnel name, values are partial CostModel field dicts) and per-stack switch
+# blips (keyed by ConcreteStack fingerprint, from reconfig.swap span
+# durations). The hand-written annotations stay as priors; measured fields
+# override them wherever a trace produced enough samples. Process-wide, like
+# ``repro.comm.chunnels.cost_calibration`` (which funnels into this).
+_MEASURED_CHUNNELS: Dict[str, Dict[str, float]] = {}
+_MEASURED_BLIPS: Dict[str, float] = {}
+
+
+def chunnel_name(ch: Any) -> str:
+    """The name trace records/calibration key a chunnel by: ``fn_name``
+    (FnChunnel), then ``name``, then the class name."""
+    return (getattr(ch, "fn_name", None) or getattr(ch, "name", None)
+            or type(ch).__name__)
+
+
+def install_measured_costs(chunnels: Optional[Dict[str, Dict[str, float]]] = None,
+                           stack_blips: Optional[Dict[str, float]] = None
+                           ) -> None:
+    """Merge measured cost fields into the process-wide override tables.
+
+    ``chunnels`` maps chunnel name -> partial CostModel fields (e.g.
+    ``{"op_latency_s": 2.1e-3, "dcn_bytes_per_byte": 0.4}``); ``stack_blips``
+    maps stack fingerprint -> measured switch blip seconds.
+    """
+    for name, fields in (chunnels or {}).items():
+        _MEASURED_CHUNNELS.setdefault(name, {}).update(fields)
+    _MEASURED_BLIPS.update(stack_blips or {})
+
+
+def measured_costs() -> Tuple[Dict[str, Dict[str, float]], Dict[str, float]]:
+    """(chunnel overrides, stack blips) currently installed (copies)."""
+    return ({k: dict(v) for k, v in _MEASURED_CHUNNELS.items()},
+            dict(_MEASURED_BLIPS))
+
+
+def reset_measured_costs() -> None:
+    _MEASURED_CHUNNELS.clear()
+    _MEASURED_BLIPS.clear()
+
 
 def chunnel_cost(ch: Any) -> CostModel:
-    """A chunnel's cost model (NEUTRAL when it carries no annotation)."""
+    """A chunnel's cost model: its static annotation (NEUTRAL when it
+    carries none), with any MEASURED fields overriding the annotation."""
     fn = getattr(ch, "cost_model", None)
     out = fn() if callable(fn) else None
-    return out if isinstance(out, CostModel) else NEUTRAL
+    out = out if isinstance(out, CostModel) else NEUTRAL
+    if _MEASURED_CHUNNELS:
+        m = _MEASURED_CHUNNELS.get(chunnel_name(ch))
+        if m:
+            out = replace(out, **m)
+    return out
 
 
 def stack_cost(stack: Any) -> CostModel:
     """Fold a ConcreteStack's chunnel cost models into one.
 
     Latencies and blips add; byte ratios multiply (a compressor below a
-    replicator compresses the replicated bytes)."""
+    replicator compresses the replicated bytes). A measured whole-stack blip
+    (from ``reconfig.swap`` span durations) replaces the additive estimate —
+    the swap IS the blip, measured end to end."""
     lat = blip = 0.0
     ratio = 1.0
     for ch in getattr(stack, "chunnels", ()):
@@ -83,6 +133,12 @@ def stack_cost(stack: Any) -> CostModel:
         lat += c.op_latency_s
         blip += c.switch_blip_s
         ratio *= c.dcn_bytes_per_byte
+    if _MEASURED_BLIPS:   # keep fingerprint() off the common path
+        fp = getattr(stack, "fingerprint", None)
+        if callable(fp):
+            measured = _MEASURED_BLIPS.get(fp())
+            if measured is not None:
+                blip = measured
     return CostModel(lat, ratio, blip)
 
 

@@ -58,16 +58,21 @@ class FleetAggregator:
             that comes back rejoins from its next ``FleetMember.poll``). The
             expiry transaction re-checks freshness first — a member that
             republished between our read and the txn survives.
+        plane: key-prefix namespace, matching the publishers'. Only the
+            default ``"fleet"`` plane carries rendezvous membership, so the
+            eviction side effect of expiry is skipped on any other plane.
         now: clock override for deterministic tests.
     """
 
     def __init__(self, store: KVStore, fleet_id: str, *, ttl_s: float = 1.0,
                  sources: Sequence[SignalSource] = (), expire: bool = True,
+                 plane: str = "fleet",
                  now: Callable[[], float] = time.monotonic):
         self.store = store
         self.fleet_id = fleet_id
         self.ttl_s = ttl_s
         self.expire = expire
+        self.plane = plane
         self.sources: List[SignalSource] = list(sources)
         self._now = now
         self.signal_errors = 0
@@ -83,11 +88,11 @@ class FleetAggregator:
         """(fresh records by member, stale member names). Stale = roster entry
         with no record or a heartbeat older than ``ttl_s``."""
         now = self._now() if now is None else now
-        roster = self.store.get(roster_key(self.fleet_id)) or {}
+        roster = self.store.get(roster_key(self.fleet_id, self.plane)) or {}
         fresh: Dict[str, dict] = {}
         stale: List[str] = []
         for m in roster:
-            rec = self.store.get(member_key(self.fleet_id, m))
+            rec = self.store.get(member_key(self.fleet_id, m, self.plane))
             if rec is not None and now - rec.get("at", 0.0) <= self.ttl_s:
                 fresh[m] = rec
             else:
@@ -98,23 +103,27 @@ class FleetAggregator:
 
     def _expire(self, members: List[str], now: float) -> None:
         members_map_key = f"{fleet_conn_id(self.fleet_id)}/members"
+        # rendezvous membership only exists on the coordination plane; an
+        # obs-plane aggregator expires records without touching 2PC state
+        evict_rdv = self.plane == "fleet"
 
         def _fn(txn):
             dropped = evicted = 0
-            roster = dict(txn.get(roster_key(self.fleet_id)) or {})
-            rdv = dict(txn.get(members_map_key) or {})
+            roster = dict(txn.get(roster_key(self.fleet_id, self.plane)) or {})
+            rdv = dict(txn.get(members_map_key) or {}) if evict_rdv else {}
             for m in members:
-                rec = txn.get(member_key(self.fleet_id, m))
+                rec = txn.get(member_key(self.fleet_id, m, self.plane))
                 if rec is not None and now - rec.get("at", 0.0) <= self.ttl_s:
                     continue  # republished since we looked: not stale anymore
                 roster.pop(m, None)
                 # also evict from the rendezvous membership map: a crashed
                 # member must not block try_commit's unanimous acks forever
-                evicted += rdv.pop(m, None) is not None
-                txn.delete(member_key(self.fleet_id, m))
+                if evict_rdv:
+                    evicted += rdv.pop(m, None) is not None
+                txn.delete(member_key(self.fleet_id, m, self.plane))
                 dropped += 1
             if dropped:   # a no-op put would still bump the roster version
-                txn.put(roster_key(self.fleet_id), roster)
+                txn.put(roster_key(self.fleet_id, self.plane), roster)
             if evicted:
                 txn.put(members_map_key, rdv)
             return dropped

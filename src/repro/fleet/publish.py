@@ -32,12 +32,12 @@ def fleet_conn_id(fleet_id: str) -> str:
     return f"fleet/{fleet_id}"
 
 
-def roster_key(fleet_id: str) -> str:
-    return f"fleet/{fleet_id}/roster"
+def roster_key(fleet_id: str, plane: str = "fleet") -> str:
+    return f"{plane}/{fleet_id}/roster"
 
 
-def member_key(fleet_id: str, member: str) -> str:
-    return f"fleet/{fleet_id}/member/{member}"
+def member_key(fleet_id: str, member: str, plane: str = "fleet") -> str:
+    return f"{plane}/{fleet_id}/member/{member}"
 
 
 class FleetPublisher:
@@ -54,12 +54,17 @@ class FleetPublisher:
             local controller also ticks this telemetry — rates then cover the
             interval since ITS last tick, and the two consumers don't fight
             over the window (see ``ConnTelemetry.snapshot``).
+        plane: key-prefix namespace. The default ``"fleet"`` plane doubles as
+            the rendezvous coordination prefix; the observability federation
+            publishes metrics snapshots under ``"obs"`` so the two record
+            streams never collide in one store.
         now: clock override for deterministic tests.
     """
 
     def __init__(self, store: KVStore, fleet_id: str, member: str,
                  telemetry: Any, *, period_s: float = 0.05,
                  reset_window: bool = True, max_retries: int = 32,
+                 plane: str = "fleet",
                  now: Callable[[], float] = time.monotonic):
         self.store = store
         self.fleet_id = fleet_id
@@ -68,9 +73,10 @@ class FleetPublisher:
         self.period_s = period_s
         self.reset_window = reset_window
         self.max_retries = max_retries
+        self.plane = plane
         self._now = now
-        self.key = member_key(fleet_id, member)
-        self.roster = roster_key(fleet_id)
+        self.key = member_key(fleet_id, member, plane)
+        self.roster = roster_key(fleet_id, plane)
         self.seq = 0            # version of OUR record (monotonic per member)
         self.published = 0
         self.conflicts = 0      # optimistic retries we personally paid
@@ -82,7 +88,7 @@ class FleetPublisher:
         record. ``extra`` keys are merged into the snapshot (per-member
         signals the telemetry doesn't carry, e.g. a locally probed value)."""
         now = self._now() if now is None else now
-        snap = dict(self.telemetry.snapshot(reset_window=self.reset_window))
+        snap = self._snapshot()
         if extra:
             snap.update(extra)
         self.seq += 1
@@ -101,6 +107,12 @@ class FleetPublisher:
         self.published += 1
         self._last_pub = now
         return rec
+
+    def _snapshot(self) -> Dict[str, Any]:
+        """What one published record carries. Subclasses (e.g. the obs-plane
+        ``MetricsPublisher``) override this to ship richer payloads than a
+        flat telemetry snapshot."""
+        return dict(self.telemetry.snapshot(reset_window=self.reset_window))
 
     def _count_conflict(self) -> None:
         self.conflicts += 1

@@ -23,9 +23,14 @@
                          destination stay legal.
 
 Hot classes: ``Fabric``/``Endpoint``/``Broker`` by name, anything named
-``*DP``/``*Datapath``, and anything deriving from a base so named (nested
-class definitions included). Hot methods: send / recv / send_batch /
-recv_many / send_many / publish_batch.
+``*DP``/``*Datapath``, anything deriving from a base so named (nested class
+definitions included), plus the observability aggregation classes
+(``MetricsFederator``/``SLOEngine``/``MetricsPublisher``) — their
+``observe``/``view``/``merged``/``publish`` methods run once per control
+tick over every member/SLO, so a per-element delivery call or a span per
+loop iteration there multiplies by fleet size exactly like a per-message
+loop on the data plane. Hot methods: send / recv / send_batch / recv_many /
+send_many / publish_batch / observe / view / merged / publish.
 """
 from __future__ import annotations
 
@@ -35,9 +40,10 @@ from typing import List
 from .engine import Module, analyzer
 from .findings import Finding
 
-HOT_CLASS_NAMES = {"Fabric", "Endpoint", "Broker"}
+HOT_CLASS_NAMES = {"Fabric", "Endpoint", "Broker",
+                   "MetricsFederator", "SLOEngine", "MetricsPublisher"}
 HOT_METHODS = {"send", "recv", "send_batch", "recv_many", "send_many",
-               "publish_batch"}
+               "publish_batch", "observe", "view", "merged", "publish"}
 DELIVERY_ATTRS = {"send", "put", "put_nowait", "publish", "request"}
 
 _LOOPS = (ast.For, ast.While, ast.ListComp, ast.SetComp, ast.GeneratorExp,

@@ -2,9 +2,12 @@
 
 Everything importable from this package root is stdlib-only, so core
 modules (`core/fabric.py`, `core/reconfigure.py`, ...) may import
-``TRACER`` without cycles. The scenario runner (``repro.obs.scenario``)
-and CLI (``python -m repro.obs``) import the core stack and are kept out
-of this root for the same reason. See docs/architecture.md §10.
+``TRACER`` without cycles. The scenario runner (``repro.obs.scenario``),
+CLI (``python -m repro.obs``), metrics federation (``repro.obs.federate``,
+imports the fleet KV plane) and trace calibration (``repro.obs.calibrate``,
+feeds the comm plane) import the core stack and are kept out of this root
+for the same reason. The SLO engine (``repro.obs.slo``) is stdlib-only and
+exported here. See docs/architecture.md §10–§11.
 """
 from repro.obs.export import (
     PHASES,
@@ -16,12 +19,21 @@ from repro.obs.export import (
 )
 from repro.obs.flight import RECORDER, FlightRecorder, strand_alarm
 from repro.obs.metrics import MetricsRegistry, parse_prometheus
+from repro.obs.slo import (
+    SLO,
+    SLOEngine,
+    availability_slo_for,
+    error_ratio_slo_for,
+    latency_slo_for,
+)
 from repro.obs.trace import NOOP_SPAN, Span, TRACER, Tracer
 
 __all__ = [
     "TRACER", "Tracer", "Span", "NOOP_SPAN",
     "MetricsRegistry", "parse_prometheus",
     "FlightRecorder", "RECORDER", "strand_alarm",
+    "SLO", "SLOEngine", "latency_slo_for", "error_ratio_slo_for",
+    "availability_slo_for",
     "to_chrome", "write_chrome", "render_timeline", "phase_durations",
     "stitched_trace_ids", "PHASES",
 ]

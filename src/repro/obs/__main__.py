@@ -16,6 +16,15 @@ parses as exposition text, and ONE stitched trace id covers the
 controller decision, the 2PC prepare/commit, and the swap on both
 endpoints. ``--render FILE`` skips the scenario and renders a previously
 written trace or flight-recorder dump instead.
+
+Two standalone modes skip the scenario entirely (docs/architecture.md §11):
+
+  * ``--fleet`` publishes two synthetic members through the KV obs plane
+    and prints the federated dashboard — per-member rows, the merged
+    ``_fleet`` row, and the per-region split.
+  * ``--slo`` drives an ``SLOEngine`` through a scripted healthy → burning
+    → recovered day on a fake clock and prints the error-budget report
+    (burn rates, budget spent, breach/recovery counts).
 """
 from __future__ import annotations
 
@@ -80,6 +89,99 @@ def check_records(records: list) -> dict:
             "all_traces": traces}
 
 
+def fleet_demo(*, out: "Path | None" = None) -> int:
+    """--fleet: two synthetic members publish through the KV obs plane; print
+    the federated dashboard (per-member, merged ``_fleet`` row, per-region)."""
+    from repro.core.rendezvous import KVStore
+    from repro.obs.federate import MetricsFederator, MetricsPublisher
+    from repro.obs.metrics import MetricsRegistry
+
+    store = KVStore()
+    members = [("edge-1", "edge", {"ops_per_s": 300.0, "rtt_p50_s": 0.0012,
+                                   "rtt_p95_s": 0.0074}),
+               ("core-1", "core", {"ops_per_s": 900.0, "rtt_p50_s": 0.0003,
+                                   "rtt_p95_s": 0.0009})]
+    pubs = []
+    for name, region, metrics in members:
+        reg = MetricsRegistry()
+        reg.register("conn", lambda m=metrics: dict(m), instance=f"{name}-conn")
+        pub = MetricsPublisher(store, "demo-fleet", name, reg, region=region)
+        pub.publish()
+        pubs.append(pub)
+    fed = MetricsFederator(store, "demo-fleet", ttl_s=5.0)
+
+    view = fed.view()
+    print(f"fleet demo-fleet: members={view['obs.members']} "
+          f"stale={view['obs.stale_members']} "
+          f"availability={view['obs.availability']:.2f}")
+    print()
+    print(f"  {'member':<10} {'region':<8} {'ops/s':>8} {'p50 ms':>8} "
+          f"{'p95 ms':>8}")
+    for (name, region, m) in members:
+        print(f"  {name:<10} {region:<8} {m['ops_per_s']:>8.0f} "
+              f"{m['rtt_p50_s'] * 1e3:>8.2f} {m['rtt_p95_s'] * 1e3:>8.2f}")
+    merged = fed.merged()["conn"]
+    print(f"  {'_fleet':<10} {'(merged)':<8} "
+          f"{merged['ops_per_s']:>8.0f} "
+          f"{merged['rtt_p50_s'] * 1e3:>8.2f} "
+          f"{merged['rtt_p95_s'] * 1e3:>8.2f}")
+    print()
+    print("  per-region split (what region-scoped SLOs read):")
+    for region, fams in sorted(fed.per_region().items()):
+        print(f"    obs.region.{region}.conn.rtt_p95_s = "
+              f"{fams['conn']['rtt_p95_s'] * 1e3:.2f} ms")
+    if out is not None:
+        out.parent.mkdir(parents=True, exist_ok=True)
+        fed.federated_registry().write_prometheus(out)
+        print(f"\nwrote {out}")
+    for pub in pubs:
+        pub.retire()
+    return 0
+
+
+def slo_demo() -> int:
+    """--slo: a scripted healthy → burning → recovered day on a fake clock;
+    print each phase's burn rates and the final error-budget report."""
+    from repro.obs.slo import SLO, SLOEngine
+
+    engine = SLOEngine(
+        [SLO("latency", "conn.rtt_p95_s", objective=0.95, threshold=0.005),
+         SLO("errors", "conn.error_ratio", objective=0.999,
+             kind="error_ratio")],
+        fast_window_s=5.0, slow_window_s=60.0, budget_window_s=3600.0,
+        recorder=None)   # a demo must not trip the real flight recorder
+
+    phases = [("healthy", 60, {"conn.rtt_p95_s": 0.001,
+                               "conn.error_ratio": 0.0}),
+              ("burning", 90, {"conn.rtt_p95_s": 0.014,
+                               "conn.error_ratio": 0.02}),
+              ("recovered", 120, {"conn.rtt_p95_s": 0.0012,
+                                  "conn.error_ratio": 0.0})]
+    t = 0.0
+    print("  phase      t(s)  latency.burn_fast  latency.burn_slow  alarms")
+    for label, ticks, view in phases:
+        for _ in range(ticks):
+            t += 1.0
+            sigs = engine.observe(view, now=t)
+        print(f"  {label:<9} {t:>5.0f}  "
+              f"{sigs['slo.latency.burn_fast']:>17.2f}  "
+              f"{sigs['slo.latency.burn_slow']:>17.2f}  "
+              f"{sigs['slo.alarms']:>6}")
+    print()
+    print("  events:")
+    for ev in engine.events:
+        print(f"    t={ev['t']:>5.0f}  {ev['slo']:<8} {ev['kind']:<9} "
+              f"burn_fast={ev['burn_fast']:.2f}")
+    print()
+    print(f"  {'slo':<8} {'objective':>9} {'spent':>7} {'remaining':>9} "
+          f"{'breaches':>8} {'recoveries':>10}")
+    for row in engine.report(now=t):
+        print(f"  {row['slo']:<8} {row['objective']:>9.3f} "
+              f"{row['budget_spent']:>7.3f} {row['budget_remaining']:>9.3f} "
+              f"{row['breaches']:>8} {row['recoveries']:>10}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs",
@@ -97,7 +199,22 @@ def main(argv=None) -> int:
     ap.add_argument("--width", type=int, default=48,
                     help="timeline bar width (default 48)")
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--fleet", action="store_true",
+                    help="federated-dashboard demo: publish two synthetic "
+                         "members over the KV obs plane and print the merged "
+                         "view (skips the scenario; --metrics writes the "
+                         "federated Prometheus snapshot)")
+    ap.add_argument("--slo", action="store_true",
+                    help="error-budget demo: drive an SLOEngine through a "
+                         "scripted healthy->burning->recovered day on a fake "
+                         "clock and print the burn/budget report (skips the "
+                         "scenario)")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        return fleet_demo(out=args.metrics)
+    if args.slo:
+        return slo_demo()
 
     if args.render is not None:
         records = _load_records(args.render)

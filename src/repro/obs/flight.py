@@ -17,6 +17,7 @@ Stdlib-only.
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 import threading
@@ -27,16 +28,28 @@ from repro.obs.trace import TRACER, Tracer
 __all__ = ["FlightRecorder", "RECORDER", "strand_alarm"]
 
 _DEFAULT_OUT = os.path.join("benchmarks", "out")
+_DEFAULT_KEEP = 16
 
 
 class FlightRecorder:
-    """Dumps the tracer's recent spans/events to a JSON file on demand."""
+    """Dumps the tracer's recent spans/events to a JSON file on demand.
+
+    ``max_dumps`` (env ``REPRO_FLIGHTREC_KEEP``) caps how many
+    ``flightrec_*.json`` files the out dir retains: after each write the
+    oldest dumps beyond the cap are deleted, so repeated chaos runs cannot
+    grow the directory unboundedly. 0 disables rotation.
+    """
 
     def __init__(self, tracer: Optional[Tracer] = None,
-                 out_dir: Optional[str] = None):
+                 out_dir: Optional[str] = None,
+                 max_dumps: Optional[int] = None):
         self.tracer = tracer or TRACER
         self.out_dir = out_dir or os.environ.get("REPRO_FLIGHTREC_DIR",
                                                  _DEFAULT_OUT)
+        if max_dumps is None:
+            max_dumps = int(os.environ.get("REPRO_FLIGHTREC_KEEP",
+                                           _DEFAULT_KEEP))
+        self.max_dumps = max_dumps
         self._lock = threading.Lock()
         self._dumped: Set[str] = set()
         self.dumps = 0
@@ -67,7 +80,33 @@ class FlightRecorder:
         }
         with open(path, "w") as f:
             json.dump(payload, f, indent=1, default=str)
+        self._rotate(keep=path)
         return path
+
+    def _rotate(self, keep: str) -> None:
+        """Delete the oldest ``flightrec_*.json`` beyond ``max_dumps``.
+
+        Ordered oldest-first by (mtime, name); the file just written is
+        always retained even if a coarse filesystem clock ties every mtime.
+        """
+        if self.max_dumps <= 0:
+            return
+        dumps = glob.glob(os.path.join(self.out_dir, "flightrec_*.json"))
+        if len(dumps) <= self.max_dumps:
+            return
+        keep_abs = os.path.abspath(keep)
+        dumps.sort(key=lambda p: (os.path.getmtime(p), p))
+        excess = len(dumps) - self.max_dumps
+        for p in dumps:
+            if excess <= 0:
+                break
+            if os.path.abspath(p) == keep_abs:
+                continue
+            try:
+                os.remove(p)
+                excess -= 1
+            except OSError:  # pragma: no cover - raced with another writer
+                pass
 
     def capture(self, reason: str):
         """``with RECORDER.capture("chaos_smoke"): assert ...`` — dump on

@@ -156,17 +156,49 @@ def _numeric_attrs(obj) -> dict:
     return out
 
 
+# labels use a greedy ``.*`` (a label VALUE may contain ``}``); the value
+# charset admits inf/nan spellings in either case (repr() emits lowercase,
+# canonical Prometheus writes ``+Inf``/``NaN``)
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
-    r"(?:\{(?P<labels>[^}]*)\})?\s+"
-    r"(?P<value>[-+0-9.eEinfa]+)$")
+    r"(?:\{(?P<labels>.*)\})?\s+"
+    r"(?P<value>[-+0-9.eEinfaINFA]+)$")
+
+# quote-aware label pair: the value is a run of non-quote/non-backslash
+# chars or backslash escapes — a comma INSIDE a quoted value no longer
+# splits the pair (the old naive ``split(",")`` did)
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+_UNESC = {"n": "\n", '"': '"', "\\": "\\"}
+
+
+def _unescape(s: str) -> str:
+    """Invert :func:`_esc` — one left-to-right scan, so a literal
+    backslash-n survives as ``\\n`` text and an escaped newline comes back
+    as a real newline (chained ``str.replace`` gets this wrong)."""
+    if "\\" not in s:
+        return s
+    out: List[str] = []
+    i, n = 0, len(s)
+    while i < n:
+        c = s[i]
+        if c == "\\" and i + 1 < n:
+            out.append(_UNESC.get(s[i + 1], "\\" + s[i + 1]))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
 
 
 def parse_prometheus(text: str) -> List[dict]:
     """Parse exposition text back into samples; raises on malformed lines.
 
     Used by the CLI ``--check`` and verify.sh to assert the exporter's
-    output actually parses. Returns ``[{"name", "labels", "value"}]``.
+    output actually parses. Label values are unescaped, so
+    ``parse_prometheus(registry.to_prometheus())`` round-trips instance
+    names containing quotes, backslashes, newlines, and commas exactly.
+    Returns ``[{"name", "labels", "value"}]``.
     """
     samples: List[dict] = []
     for lineno, raw in enumerate(text.splitlines(), 1):
@@ -178,9 +210,8 @@ def parse_prometheus(text: str) -> List[dict]:
             raise ValueError(f"metrics line {lineno} unparseable: {raw!r}")
         labels = {}
         if m.group("labels"):
-            for part in m.group("labels").split(","):
-                k, _, v = part.partition("=")
-                labels[k.strip()] = v.strip().strip('"')
+            for k, v in _LABEL_RE.findall(m.group("labels")):
+                labels[k] = _unescape(v)
         samples.append({"name": m.group("name"), "labels": labels,
                         "value": float(m.group("value"))})
     return samples

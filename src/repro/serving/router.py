@@ -240,7 +240,13 @@ def kv_fleet_adaptive_policy(ctx: PolicyContext) -> List[Rule]:
     aggregate with an external ``SignalSource`` value: a spot-price spike
     while aggregate load is below the high-water mark consolidates traffic
     behind the router (priority between the two load rules), so operators can
-    shrink the backend fleet while the market is expensive."""
+    shrink the backend fleet while the market is expensive.
+
+    With ``slo`` set (an SLO name whose ``slo.*`` signals reach the fleet
+    snapshot — ``aggregator.add_source(engine)``), a burn-rate clause
+    OUTRANKS both load rules: an alarmed latency budget moves traffic to the
+    direct ClientShard path (drops the router hop) regardless of where
+    offered load sits — intent-level arming, not raw thresholds."""
     p = ctx.params
     high = p.get("fleet_high_qps", 200.0)
     low = p.get("fleet_low_qps", 120.0)
@@ -259,6 +265,13 @@ def kv_fleet_adaptive_policy(ctx: PolicyContext) -> List[Rule]:
                    below("fleet.offered_qps", high)),
             ctx.candidate_named("ServerRouter").target,
             hold=hold, priority=1))
+    slo = p.get("slo")
+    if slo is not None:
+        rules.insert(0, Rule(
+            "fleet-slo-burn->client-shard",
+            above(f"slo.{slo}.alarm", 0.5),
+            ctx.candidate_named("ClientShard").target,
+            hold=p.get("slo_hold", 1), priority=3))
     return rules
 
 

@@ -720,3 +720,63 @@ class TestSpanInHotLoop:
                "            # lint: allow[span-in-hot-loop] fixture justification\n"
                "            sp = TRACER.span('m')\n")
         assert lint_sources({CORE: src}) == []
+
+
+class TestObsHotClasses:
+    """PR 10: the observability aggregation classes are hot — their per-tick
+    methods run over every member/SLO, so the data-plane rules apply, and
+    the SLO engine's lock discipline (compute locked, I/O after release) is
+    checkable as blocking-under-lock."""
+
+    OBS = "src/repro/obs/fixture.py"
+
+    def test_span_per_member_in_federator_view_flagged(self):
+        src = ("class MetricsFederator:\n"
+               "    def view(self, now=None):\n"
+               "        out = {}\n"
+               "        for m, rec in self.members().items():\n"
+               "            with TRACER.span('member'):\n"
+               "                out[m] = rec\n"
+               "        return out\n")
+        assert rules_of(lint_sources({self.OBS: src})) == {"span-in-hot-loop"}
+
+    def test_per_member_publish_loop_flagged(self):
+        src = ("class MetricsPublisher:\n"
+               "    def publish(self):\n"
+               "        for key, rec in self.records():\n"
+               "            self.store.put(key, rec)\n")
+        assert rules_of(lint_sources({self.OBS: src})) == {
+            "per-message-hot-path"}
+
+    def test_kv_transact_under_engine_lock_flagged(self):
+        # the SLO engine must never touch the KV plane while holding its
+        # lock: the view is sampled before, side effects fire after release
+        src = ("import threading\n"
+               "class SLOEngine:\n"
+               "    def __init__(self):\n"
+               "        self._lock = threading.Lock()\n"
+               "    def observe(self, store):\n"
+               "        with self._lock:\n"
+               "            store.transact_retry(lambda t: None)\n")
+        assert rules_of(lint_sources({self.OBS: src})) == {
+            "blocking-under-lock"}
+
+    def test_compute_locked_io_after_release_clean(self):
+        # the shipped SLOEngine.observe shape: fold under the lock, fire
+        # recorder/tracer work on the collected list afterwards
+        src = ("import threading\n"
+               "class SLOEngine:\n"
+               "    def __init__(self):\n"
+               "        self._lock = threading.Lock()\n"
+               "        self.fired = []\n"
+               "    def observe(self, view, recorder):\n"
+               "        with self._lock:\n"
+               "            fired = list(self.fired)\n"
+               "        for ev in fired:\n"
+               "            recorder.dump(ev)\n")
+        assert lint_sources({self.OBS: src}) == []
+
+    def test_shipped_obs_modules_clean_under_extended_rules(self):
+        fs, _src = lint_paths([SRC / "obs" / "federate.py",
+                               SRC / "obs" / "slo.py"])
+        assert fs == [], [str(f) for f in fs]

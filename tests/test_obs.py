@@ -9,6 +9,7 @@ close their span/record with a ``drop_reason``.
 from __future__ import annotations
 
 import json
+import math
 import threading
 import time
 from collections import deque
@@ -572,3 +573,94 @@ class TestKvSwitchScenario:
         assert {"fabric", "conn", "controller"} <= families
         # scenario leaves the global tracer the way it found it
         assert not TRACER.enabled
+
+
+# ---------------------------------------------------------------------------
+# PR 10: flight-recorder rotation + Prometheus exposition edge cases
+# ---------------------------------------------------------------------------
+
+
+class TestFlightRecorderRotation:
+    def test_oldest_dumps_rotated_out(self, tmp_path):
+        TRACER.enable()
+        rec = FlightRecorder(out_dir=str(tmp_path), max_dumps=3)
+        for i in range(5):
+            assert rec.dump(f"r{i}") is not None
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert names == ["flightrec_r2.json", "flightrec_r3.json",
+                         "flightrec_r4.json"]
+
+    def test_just_written_dump_survives_mtime_ties(self, tmp_path):
+        # give every prior dump an identical (newer) mtime: (mtime, name)
+        # ordering alone would then delete the newest file — the keep guard
+        # must protect it
+        import os as _os
+
+        TRACER.enable()
+        rec = FlightRecorder(out_dir=str(tmp_path), max_dumps=1)
+        rec.dump("a")
+        path = rec.dump("z_last")
+        for p in tmp_path.iterdir():
+            _os.utime(p, (2_000_000_000, 2_000_000_000))
+        rec.dump("b")  # triggers rotation over the tied set
+        assert (tmp_path / "flightrec_b.json").exists()
+
+    def test_zero_disables_rotation(self, tmp_path):
+        TRACER.enable()
+        rec = FlightRecorder(out_dir=str(tmp_path), max_dumps=0)
+        for i in range(6):
+            rec.dump(f"r{i}")
+        assert len(list(tmp_path.iterdir())) == 6
+
+    def test_env_var_sets_default_cap(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_FLIGHTREC_KEEP", "2")
+        TRACER.enable()
+        rec = FlightRecorder(out_dir=str(tmp_path))
+        assert rec.max_dumps == 2
+        for i in range(4):
+            rec.dump(f"r{i}")
+        assert len(list(tmp_path.iterdir())) == 2
+
+
+class TestPrometheusEdgeCases:
+    def test_label_escaping_round_trips(self):
+        from repro.obs.metrics import _unescape
+
+        reg = MetricsRegistry()
+        nasty = 'quote:" back:\\ newline:\n comma:, done'
+        reg.register("conn", lambda: {"ops": 1.0}, instance=nasty)
+        samples = parse_prometheus(reg.to_prometheus())
+        assert samples[0]["labels"]["instance"] == nasty
+        # the scanner is left-to-right: the four-char sequence \\n is an
+        # escaped backslash then a literal n, NOT a newline
+        assert _unescape("\\\\n") == "\\n"
+        assert _unescape("\\n") == "\n"
+        assert _unescape('\\"x\\"') == '"x"'
+
+    def test_non_finite_values_round_trip(self):
+        reg = MetricsRegistry()
+        reg.register("conn", lambda: {"nan_v": float("nan"),
+                                      "pinf": float("inf"),
+                                      "ninf": float("-inf")}, instance="i")
+        by_name = {s["name"].rsplit("_", 1)[-1]: s["value"]
+                   for s in parse_prometheus(reg.to_prometheus())}
+        assert math.isnan(by_name["v"])        # repro_conn_nan_v
+        assert by_name["pinf"] == math.inf
+        assert by_name["ninf"] == -math.inf
+
+    def test_federated_multi_member_output_parses(self):
+        from repro.core.rendezvous import KVStore
+        from repro.obs.federate import MetricsFederator, MetricsPublisher
+
+        store = KVStore()
+        now = lambda: 5.0
+        for name, ops in (("edge-1", 10.0), ('odd"member', 20.0)):
+            reg = MetricsRegistry()
+            reg.register("conn", lambda o=ops: {"ops_per_s": o},
+                         instance=f"{name}/c")
+            MetricsPublisher(store, "promfed", name, reg, now=now).publish()
+        fed = MetricsFederator(store, "promfed", ttl_s=5.0, now=now)
+        samples = parse_prometheus(fed.federated_registry().to_prometheus())
+        insts = {s["labels"]["instance"] for s in samples}
+        assert 'odd"member/odd"member/c' in insts
+        assert "_fleet" in insts
